@@ -1,0 +1,48 @@
+//! Shared helpers for the experiment benches (no criterion in the
+//! vendored crate set — each bench is a `harness = false` binary built on
+//! `svmscreen::report::timer::BenchStats`).
+#![allow(dead_code)]
+
+use svmscreen::data::dataset::Dataset;
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::prelude::*;
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+
+/// The three dataset regimes every experiment sweeps (DESIGN.md §4).
+pub fn dataset_trio(scale: f64) -> Vec<Dataset> {
+    let s = |v: usize| ((v as f64 * scale) as usize).max(20);
+    vec![
+        SynthSpec::dense(s(300), s(600), 9001).generate(),
+        SynthSpec::text(s(500), s(3000), 9002).generate(),
+        SynthSpec::corr(s(300), s(600), 9003).generate(),
+    ]
+}
+
+/// Solves at `lambda1` to high precision and returns the Eq. 20 dual map.
+pub fn solved_theta(p: &Problem, lambda1: f64) -> Vec<f64> {
+    let rep = solve(
+        SolverKind::Cd,
+        &p.x,
+        &p.y,
+        lambda1,
+        None,
+        &SolveOptions { tol: 1e-10, max_iter: 50_000, ..Default::default() },
+    )
+    .expect("solve");
+    assert!(rep.converged, "lambda1 solve did not converge: {:?}", rep.gap);
+    svmscreen::svm::dual::theta_from_primal(&p.x, &p.y, &rep.w, rep.b, lambda1)
+}
+
+/// Writes a CSV under `target/experiments/` and reports the path.
+pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) {
+    let path = format!("target/experiments/{name}.csv");
+    svmscreen::report::csv::write_file(&path, headers, rows).expect("csv write");
+    println!("[csv] {path}");
+}
+
+/// Marks the start of a bench in the log.
+pub fn banner(id: &str, what: &str) {
+    println!("\n================================================================");
+    println!("{id}: {what}");
+    println!("================================================================");
+}

@@ -1,0 +1,56 @@
+//! F1 (figure): rejection ratio vs λ/λ_max along the path, per dataset
+//! and rule. Paper-shaped expectation: all safe rules → 1 as λ→λ_max;
+//! paper ≥ ball ≥ sphere everywhere; power decays as λ shrinks.
+
+mod common;
+
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+
+fn main() {
+    common::banner("F1", "rejection ratio along the regularization path");
+    let mut csv: Vec<Vec<String>> = Vec::new();
+    for ds in common::dataset_trio(1.0) {
+        let p = Problem::from_dataset(&ds);
+        let grid = geometric(p.lambda_max(), 0.05, 30);
+        let mut series: Vec<(RuleKind, Vec<f64>)> = Vec::new();
+        for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere] {
+            let rep = run_path(&p, &grid, &PathConfig { rule, ..Default::default() })
+                .expect("path");
+            series.push((rule, rep.steps.iter().map(|s| s.rejection).collect()));
+        }
+        let mut t = Table::new(
+            format!("F1 {} (n={} m={})", ds.name, ds.n(), ds.m()),
+            &["lambda/lmax", "paper", "ball", "sphere"],
+        );
+        for (k, &lam) in grid.iter().enumerate() {
+            let frac = lam / p.lambda_max();
+            t.row(&[
+                format!("{frac:.4}"),
+                format!("{:.3}", series[0].1[k]),
+                format!("{:.3}", series[1].1[k]),
+                format!("{:.3}", series[2].1[k]),
+            ]);
+            csv.push(vec![
+                ds.name.clone(),
+                format!("{frac:.6}"),
+                format!("{:.6}", series[0].1[k]),
+                format!("{:.6}", series[1].1[k]),
+                format!("{:.6}", series[2].1[k]),
+            ]);
+        }
+        println!("{t}");
+        // shape assertions (who wins)
+        for k in 0..grid.len() {
+            assert!(series[0].1[k] >= series[1].1[k] - 1e-9, "paper < ball at {k}");
+            assert!(series[1].1[k] >= series[2].1[k] - 1e-9, "ball < sphere at {k}");
+        }
+    }
+    common::write_csv(
+        "f1_rejection",
+        &["dataset", "lambda_frac", "paper", "ball", "sphere"],
+        &csv,
+    );
+}

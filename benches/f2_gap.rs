@@ -1,0 +1,54 @@
+//! F2 (figure): screening power vs the λ₁→λ₂ gap. The convex set K
+//! shrinks as λ₂→λ₁ (the ball radius is ½‖1/λ₂ − θ₁‖), so rejection
+//! should rise monotonically toward the small-gap end — the geometric
+//! heart of the sequential rule.
+
+mod common;
+
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::screening::rule::screen_all;
+
+fn main() {
+    common::banner("F2", "screening power vs lambda1/lambda2 gap");
+    let ds = svmscreen::data::synth::SynthSpec::text(500, 3000, 9102).generate();
+    let p = Problem::from_dataset(&ds);
+    let lambda1 = 0.7 * p.lambda_max();
+    let theta1 = common::solved_theta(&p, lambda1);
+
+    let mut t = Table::new(
+        format!("F2 {} (lambda1 = 0.7 lmax)", ds.name),
+        &["lambda2/lambda1", "paper", "ball", "sphere", "strong(unsafe)"],
+    );
+    let mut csv = Vec::new();
+    let mut prev_paper = 1.0f64;
+    for pct in [99, 97, 95, 90, 85, 80, 70, 60, 50, 40, 30] {
+        let frac = pct as f64 / 100.0;
+        let lambda2 = frac * lambda1;
+        let mut cells = vec![format!("{frac:.2}")];
+        let mut row = vec![format!("{frac:.4}")];
+        let mut paper_rej = 0.0;
+        for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong] {
+            let rep = screen_all(rule, &p.x, &p.y, &theta1, lambda1, lambda2).unwrap();
+            if rule == RuleKind::Paper {
+                paper_rej = rep.rejection_ratio();
+            }
+            cells.push(format!("{:.3}", rep.rejection_ratio()));
+            row.push(format!("{:.6}", rep.rejection_ratio()));
+        }
+        t.row(&cells);
+        csv.push(row);
+        // monotone in the gap
+        assert!(
+            paper_rej <= prev_paper + 1e-9,
+            "rejection should shrink as the gap widens"
+        );
+        prev_paper = paper_rej;
+    }
+    println!("{t}");
+    common::write_csv(
+        "f2_gap",
+        &["lambda2_over_lambda1", "paper", "ball", "sphere", "strong"],
+        &csv,
+    );
+}

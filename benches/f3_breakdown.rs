@@ -1,0 +1,68 @@
+//! F3 (figure): per-λ time breakdown — screening cost vs solve cost,
+//! with and without the rule. Paper-shaped expectation: the O(mn) screen
+//! is a small fraction of the solve it saves, so `screen+reduced-solve`
+//! beats `full-solve` at every step where rejection is nontrivial.
+
+mod common;
+
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+
+fn main() {
+    common::banner("F3", "per-lambda screen/solve time breakdown");
+    let ds = svmscreen::data::synth::SynthSpec::text(1000, 10000, 9103).generate();
+    println!("workload: {}", ds.describe());
+    let p = Problem::from_dataset(&ds);
+    let grid = geometric(p.lambda_max(), 0.05, 30);
+
+    let with = run_path(&p, &grid, &PathConfig { rule: RuleKind::Paper, ..Default::default() })
+        .expect("screened path");
+    let without = run_path(&p, &grid, &PathConfig { rule: RuleKind::None, ..Default::default() })
+        .expect("baseline path");
+
+    let mut t = Table::new(
+        "F3: per-step seconds (paper rule vs none)",
+        &["lambda/lmax", "screen_s", "solve_s(screened)", "solve_s(full)", "step speedup"],
+    );
+    let mut csv = Vec::new();
+    for k in 0..grid.len() {
+        let a = &with.steps[k];
+        let b = &without.steps[k];
+        let speedup = b.solve_seconds / (a.screen_seconds + a.solve_seconds).max(1e-12);
+        t.row(&[
+            format!("{:.4}", a.lambda_frac),
+            format!("{:.5}", a.screen_seconds),
+            format!("{:.5}", a.solve_seconds),
+            format!("{:.5}", b.solve_seconds),
+            format!("{speedup:.2}x"),
+        ]);
+        csv.push(vec![
+            format!("{:.6}", a.lambda_frac),
+            format!("{:.6}", a.screen_seconds),
+            format!("{:.6}", a.solve_seconds),
+            format!("{:.6}", b.solve_seconds),
+        ]);
+    }
+    println!("{t}");
+    let tw = with.totals();
+    let to = without.totals();
+    println!(
+        "totals: screened {:.3}s (screen {:.3}s + solve {:.3}s) vs full {:.3}s -> {:.2}x",
+        tw.screen_seconds + tw.solve_seconds,
+        tw.screen_seconds,
+        tw.solve_seconds,
+        to.solve_seconds,
+        to.solve_seconds / (tw.screen_seconds + tw.solve_seconds)
+    );
+    println!(
+        "screening overhead: {:.1}% of screened-path time",
+        100.0 * tw.screen_seconds / (tw.screen_seconds + tw.solve_seconds)
+    );
+    common::write_csv(
+        "f3_breakdown",
+        &["lambda_frac", "screen_s", "solve_screened_s", "solve_full_s"],
+        &csv,
+    );
+}

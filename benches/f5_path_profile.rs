@@ -1,0 +1,77 @@
+//! F5 (figure, supplementary): path anatomy — kept-set size vs true
+//! active-set size vs λ, plus the bound distribution at a mid-path step.
+//! Shows how much head-room the rule leaves (kept − nnz = features the
+//! bound could not certify inactive).
+
+mod common;
+
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::screening::rule::screen_all;
+
+fn main() {
+    common::banner("F5", "path anatomy: kept vs active vs screened");
+    let ds = svmscreen::data::synth::SynthSpec::text(600, 5000, 9108).generate();
+    println!("workload: {}", ds.describe());
+    let p = Problem::from_dataset(&ds);
+    let grid = geometric(p.lambda_max(), 0.05, 25);
+    let rep = run_path(&p, &grid, &PathConfig::default()).expect("path");
+
+    let mut t = Table::new(
+        "F5: per-step anatomy (paper rule)",
+        &["lambda/lmax", "screened", "kept", "nnz", "kept/nnz"],
+    );
+    let mut csv = Vec::new();
+    for s in &rep.steps {
+        t.row(&[
+            format!("{:.4}", s.lambda_frac),
+            s.screened.to_string(),
+            s.kept.to_string(),
+            s.nnz.to_string(),
+            format!("{:.1}", s.kept as f64 / s.nnz.max(1) as f64),
+        ]);
+        csv.push(vec![
+            format!("{:.6}", s.lambda_frac),
+            s.screened.to_string(),
+            s.kept.to_string(),
+            s.nnz.to_string(),
+        ]);
+    }
+    println!("{t}");
+
+    // Bound histogram at a mid-path step.
+    let k = grid.len() / 2;
+    let theta = svmscreen::svm::dual::theta_from_primal(
+        &p.x,
+        &p.y,
+        &rep.weights[k - 1],
+        rep.biases[k - 1],
+        grid[k - 1],
+    );
+    let sr = screen_all(RuleKind::Paper, &p.x, &p.y, &theta, grid[k - 1], grid[k]).unwrap();
+    let mut hist = [0usize; 8];
+    for &b in &sr.bounds {
+        let bin = ((b / 0.25) as usize).min(7);
+        hist[bin] += 1;
+    }
+    let mut ht = Table::new(
+        format!("bound histogram at lambda/lmax = {:.3}", grid[k] / p.lambda_max()),
+        &["bound range", "features"],
+    );
+    for (i, c) in hist.iter().enumerate() {
+        let label = if i == 7 {
+            ">= 1.75".to_string()
+        } else {
+            format!("[{:.2}, {:.2})", 0.25 * i as f64, 0.25 * (i + 1) as f64)
+        };
+        ht.row(&[label, c.to_string()]);
+    }
+    println!("{ht}");
+    common::write_csv(
+        "f5_path_profile",
+        &["lambda_frac", "screened", "kept", "nnz"],
+        &csv,
+    );
+}

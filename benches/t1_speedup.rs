@@ -1,0 +1,74 @@
+//! T1 (table): end-to-end path-training time per rule and solver, with
+//! the speedup column. Paper-shaped expectation: every safe rule
+//! preserves the solution path; the paper rule gives the largest
+//! speedup; the unsafe strong rule is comparable but needs its repair
+//! loop.
+
+mod common;
+
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::solver::api::SolverKind;
+
+fn main() {
+    common::banner("T1", "end-to-end path speedup per rule and solver");
+    let mut t = Table::new(
+        "T1: 30-step path to 0.05 lmax",
+        &["dataset", "solver", "rule", "total_s", "screen_s", "mean_rej%", "violations", "speedup"],
+    );
+    let mut csv = Vec::new();
+    for ds in common::dataset_trio(1.0) {
+        let p = Problem::from_dataset(&ds);
+        let grid = geometric(p.lambda_max(), 0.05, 30);
+        // FISTA only on the (small) dense set — it is the slow comparator
+        // that demonstrates solver-independence, not the workhorse.
+        let solvers: Vec<SolverKind> = if ds.name.contains("dense") {
+            vec![SolverKind::Cd, SolverKind::Fista]
+        } else {
+            vec![SolverKind::Cd]
+        };
+        for solver in solvers {
+            let mut baseline = None;
+            for rule in
+                [RuleKind::None, RuleKind::Sphere, RuleKind::BallEq, RuleKind::Paper, RuleKind::Strong]
+            {
+                let cfg = PathConfig { rule, solver, ..Default::default() };
+                let rep = run_path(&p, &grid, &cfg).expect("path");
+                let totals = rep.totals();
+                let total = rep.total_seconds;
+                if rule == RuleKind::None {
+                    baseline = Some(total);
+                }
+                let speedup = baseline.unwrap() / total;
+                t.row(&[
+                    ds.name.clone(),
+                    solver.name().into(),
+                    rule.name().into(),
+                    format!("{total:.3}"),
+                    format!("{:.3}", totals.screen_seconds),
+                    format!("{:.1}", 100.0 * totals.mean_rejection),
+                    totals.violations.to_string(),
+                    format!("{speedup:.2}x"),
+                ]);
+                csv.push(vec![
+                    ds.name.clone(),
+                    solver.name().into(),
+                    rule.name().into(),
+                    format!("{total:.6}"),
+                    format!("{:.6}", totals.screen_seconds),
+                    format!("{:.6}", totals.mean_rejection),
+                    totals.violations.to_string(),
+                    format!("{speedup:.4}"),
+                ]);
+            }
+        }
+    }
+    println!("{t}");
+    common::write_csv(
+        "t1_speedup",
+        &["dataset", "solver", "rule", "total_s", "screen_s", "mean_rejection", "violations", "speedup"],
+        &csv,
+    );
+}

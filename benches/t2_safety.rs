@@ -1,0 +1,116 @@
+//! T2 (table): safety audit + bound tightness. Safe rules must report
+//! ZERO violations against 1e−9-certified optima; the strong rule is
+//! the unsafe comparator. Tightness quantiles show how close the bound
+//! tracks the true |θ₂ᵀf̂| (smaller = tighter = more screening power).
+
+mod common;
+
+use svmscreen::data::FeatureMatrix;
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::screening::rule::screen_all;
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    sorted[pos.round() as usize]
+}
+
+fn main() {
+    common::banner("T2", "safety audit + bound tightness vs certified optima");
+    let mut t = Table::new(
+        "T2: screening from lambda1 = 0.8 lmax (solved to 1e-10)",
+        &["dataset", "rule", "checked", "screened", "violations", "slack p50", "slack p90"],
+    );
+    let mut csv = Vec::new();
+    let mut safe_violations = 0usize;
+    for ds in common::dataset_trio(0.6) {
+        let p = Problem::from_dataset(&ds);
+        let lambda1 = 0.8 * p.lambda_max();
+        let theta1 = common::solved_theta(&p, lambda1);
+        for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong] {
+            let mut checked = 0usize;
+            let mut screened = 0usize;
+            let mut violations = 0usize;
+            let mut slacks: Vec<f64> = Vec::new();
+            for frac in [0.95, 0.85, 0.7, 0.5, 0.3] {
+                let lambda2 = frac * lambda1;
+                let exact = solve(
+                    SolverKind::Cd,
+                    &p.x,
+                    &p.y,
+                    lambda2,
+                    None,
+                    &SolveOptions::precise(),
+                )
+                .expect("precise solve");
+                assert!(exact.converged);
+                let theta2 = svmscreen::svm::dual::theta_from_primal(
+                    &p.x, &p.y, &exact.w, exact.b, lambda2,
+                );
+                let ytheta2: Vec<f64> =
+                    p.y.iter().zip(&theta2).map(|(a, b)| a * b).collect();
+                let rep =
+                    screen_all(rule, &p.x, &p.y, &theta1, lambda1, lambda2).unwrap();
+                for j in 0..p.m() {
+                    checked += 1;
+                    let truth = p.x.col_dot(j, &ytheta2).abs();
+                    if rep.bounds[j].is_finite() {
+                        // slack = bound − truth ≥ 0 for safe rules
+                        slacks.push(rep.bounds[j] - truth);
+                    }
+                    if !rep.keep[j] {
+                        screened += 1;
+                        if exact.w[j].abs() > 1e-7 {
+                            violations += 1;
+                        }
+                    }
+                }
+            }
+            if rule.is_safe() {
+                safe_violations += violations;
+            }
+            slacks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            t.row(&[
+                ds.name.clone(),
+                rule.name().into(),
+                checked.to_string(),
+                screened.to_string(),
+                violations.to_string(),
+                format!("{:.4}", quantile(&slacks, 0.5)),
+                format!("{:.4}", quantile(&slacks, 0.9)),
+            ]);
+            csv.push(vec![
+                ds.name.clone(),
+                rule.name().into(),
+                checked.to_string(),
+                screened.to_string(),
+                violations.to_string(),
+                format!("{:.6}", quantile(&slacks, 0.5)),
+                format!("{:.6}", quantile(&slacks, 0.9)),
+            ]);
+            // safe-rule bounds must dominate the truth
+            if rule.is_safe() {
+                let min_slack = slacks.first().copied().unwrap_or(0.0);
+                assert!(
+                    min_slack > -1e-6,
+                    "{} rule {}: bound below truth by {}",
+                    ds.name,
+                    rule.name(),
+                    -min_slack
+                );
+            }
+        }
+    }
+    println!("{t}");
+    assert_eq!(safe_violations, 0, "safe rules must never violate");
+    println!("safe-rule violations: {safe_violations} (required: 0) ✔");
+    common::write_csv(
+        "t2_safety",
+        &["dataset", "rule", "checked", "screened", "violations", "slack_p50", "slack_p90"],
+        &csv,
+    );
+}

@@ -1,0 +1,117 @@
+//! T4 (table): screening throughput (features/s) across problem sizes
+//! and execution engines: native sequential, block-parallel (2/4/8
+//! workers), and the AOT/PJRT path. The native path should scale with
+//! workers; the PJRT path on this CPU image runs the Pallas kernel in
+//! interpret mode (correctness demo — real-TPU estimates live in
+//! DESIGN.md §Hardware-Adaptation).
+
+mod common;
+
+use svmscreen::coordinator::screen_all_parallel;
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::report::timer::BenchStats;
+use svmscreen::runtime::{screen_all_pjrt, PjrtEngine, PjrtScreenOptions};
+use svmscreen::screening::rule::screen_all;
+
+fn main() {
+    common::banner("T4", "screening throughput by engine and size");
+    let engine = {
+        let dir = PjrtEngine::default_dir();
+        if dir.exists() {
+            Some(PjrtEngine::load(dir).expect("engine"))
+        } else {
+            println!("(artifacts missing — PJRT column skipped)");
+            None
+        }
+    };
+
+    let mut t = Table::new(
+        "T4: features/second (median of 5)",
+        &["n", "m", "nnz", "native", "par x2", "par x4", "par x8", "pjrt(interp)"],
+    );
+    let mut csv = Vec::new();
+    // (n, m, dense?) — the dense rows carry nnz = n*m and are where the
+    // block-parallel executor pays; the ultra-sparse text rows finish in
+    // well under a millisecond single-threaded, so the executor's
+    // work-threshold keeps them sequential (Perf §P5).
+    for (n, m, dense) in [
+        (250, 2000, false),
+        (1000, 10_000, false),
+        (1000, 50_000, false),
+        (1000, 4_000, true),
+        (2000, 10_000, true),
+    ] {
+        let ds = if dense {
+            svmscreen::data::synth::SynthSpec::dense(n, m, 9106).generate()
+        } else {
+            svmscreen::data::synth::SynthSpec::text(n, m, 9106).generate()
+        };
+        let p = Problem::from_dataset(&ds);
+        let lambda1 = 0.7 * p.lambda_max();
+        let theta1 = common::solved_theta(&p, lambda1);
+        let lambda2 = 0.6 * lambda1;
+
+        let thru = |secs: f64| m as f64 / secs;
+        let native = BenchStats::measure(1, 5, || {
+            screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, lambda1, lambda2).unwrap();
+        });
+        let mut row = vec![
+            n.to_string(),
+            m.to_string(),
+            ds.x.nnz().to_string(),
+            format!("{:.0}", thru(native.median())),
+        ];
+        let mut csv_row = vec![
+            n.to_string(),
+            m.to_string(),
+            format!("{:.1}", thru(native.median())),
+        ];
+        for workers in [2usize, 4, 8] {
+            let par = BenchStats::measure(1, 5, || {
+                screen_all_parallel(
+                    RuleKind::Paper,
+                    &p.x,
+                    &p.y,
+                    &theta1,
+                    lambda1,
+                    lambda2,
+                    workers,
+                )
+                .unwrap();
+            });
+            row.push(format!("{:.0}", thru(par.median())));
+            csv_row.push(format!("{:.1}", thru(par.median())));
+        }
+        match &engine {
+            Some(engine) if n <= 4096 => {
+                let pjrt = BenchStats::measure(1, 3, || {
+                    screen_all_pjrt(
+                        engine,
+                        &p.x,
+                        &p.y,
+                        &theta1,
+                        lambda1,
+                        lambda2,
+                        &PjrtScreenOptions::default(),
+                    )
+                    .unwrap();
+                });
+                row.push(format!("{:.0}", thru(pjrt.median())));
+                csv_row.push(format!("{:.1}", thru(pjrt.median())));
+            }
+            _ => {
+                row.push("-".into());
+                csv_row.push("".into());
+            }
+        }
+        t.row(&row);
+        csv.push(csv_row);
+    }
+    println!("{t}");
+    common::write_csv(
+        "t4_throughput",
+        &["n", "m", "native_fps", "par2_fps", "par4_fps", "par8_fps", "pjrt_fps"],
+        &csv,
+    );
+}

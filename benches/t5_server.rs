@@ -1,0 +1,116 @@
+//! T5 (table): the screening service under load — request latency,
+//! throughput and effective batch size as a function of the batching
+//! window and client concurrency. The batcher amortizes the O(nnz)
+//! stats sweep across same-θ₁ requests, so throughput should rise with
+//! both knobs while latency stays bounded by the window.
+
+mod common;
+
+use std::time::{Duration, Instant};
+use svmscreen::coordinator::batcher::BatchPolicy;
+use svmscreen::coordinator::protocol::Json;
+use svmscreen::coordinator::server::{Client, ScreeningServer, ServerConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::report::timer::BenchStats;
+
+fn main() {
+    common::banner("T5", "screening service: batching vs latency/throughput");
+    let ds = svmscreen::data::synth::SynthSpec::text(500, 5000, 9107).generate();
+    println!("workload: {}", ds.describe());
+
+    let mut t = Table::new(
+        "T5: 40 requests/client, lambda ladder below 0.7 lmax",
+        &["window_ms", "clients", "reqs", "batches", "mean_batch", "p50 lat", "p90 lat", "req/s"],
+    );
+    let mut csv = Vec::new();
+    for window_ms in [0u64, 2, 8] {
+        for clients in [1usize, 4, 8] {
+            let p = Problem::from_dataset(&ds);
+            let lmax = p.lambda_max();
+            let server = ScreeningServer::start(
+                p,
+                ServerConfig {
+                    workers: 8,
+                    batch: BatchPolicy {
+                        max_batch: 32,
+                        window: Duration::from_millis(window_ms),
+                    },
+                    ..Default::default()
+                },
+            )
+            .expect("server");
+            let addr = server.addr;
+            // Move the server's dual point inward once.
+            {
+                let mut c = Client::connect(addr).unwrap();
+                let r = c
+                    .request(&Json::obj(vec![
+                        ("cmd", Json::Str("solve".into())),
+                        ("lambda", Json::Num(0.7 * lmax)),
+                    ]))
+                    .unwrap();
+                assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+            }
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|k| {
+                    std::thread::spawn(move || {
+                        let mut c = Client::connect(addr).unwrap();
+                        let mut lat = Vec::new();
+                        for s in 0..40 {
+                            let frac = 0.95 - 0.015 * (s % 30) as f64 - 0.002 * k as f64;
+                            let t = Instant::now();
+                            let rep = c
+                                .request(&Json::obj(vec![
+                                    ("cmd", Json::Str("screen".into())),
+                                    ("lambda2", Json::Num(frac * 0.7 * lmax)),
+                                ]))
+                                .unwrap();
+                            assert_eq!(
+                                rep.get("ok"),
+                                Some(&Json::Bool(true)),
+                                "{rep:?}"
+                            );
+                            lat.push(t.elapsed().as_secs_f64());
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let mut lats = Vec::new();
+            for h in handles {
+                lats.extend(h.join().unwrap());
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = BenchStats::from_samples(lats);
+            let (screens, batches, _) = server.metrics();
+            let mean_batch = screens as f64 / batches.max(1) as f64;
+            t.row(&[
+                window_ms.to_string(),
+                clients.to_string(),
+                screens.to_string(),
+                batches.to_string(),
+                format!("{mean_batch:.2}"),
+                svmscreen::report::timer::fmt_duration(stats.median()),
+                svmscreen::report::timer::fmt_duration(stats.p90()),
+                format!("{:.0}", screens as f64 / wall),
+            ]);
+            csv.push(vec![
+                window_ms.to_string(),
+                clients.to_string(),
+                format!("{mean_batch:.4}"),
+                format!("{:.6}", stats.median()),
+                format!("{:.6}", stats.p90()),
+                format!("{:.2}", screens as f64 / wall),
+            ]);
+            server.shutdown();
+        }
+    }
+    println!("{t}");
+    common::write_csv(
+        "t5_server",
+        &["window_ms", "clients", "mean_batch", "lat_p50_s", "lat_p90_s", "req_per_s"],
+        &csv,
+    );
+}

@@ -1,0 +1,102 @@
+//! END-TO-END driver (the headline experiment, recorded in
+//! EXPERIMENTS.md): train a full regularization path on a realistic
+//! synthetic text-classification workload with and without safe
+//! screening, and report the F1 rejection curve plus the T1 speedup row.
+//!
+//! ```bash
+//! cargo run --release --example path_screening             # full (n=2000, m=20000)
+//! cargo run --release --example path_screening -- --small  # CI-sized
+//! ```
+
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+
+fn main() -> Result<()> {
+    let small = std::env::args().any(|a| a == "--small");
+    let (n, m, steps) = if small { (400, 4000, 20) } else { (2000, 20000, 50) };
+
+    let ds = svmscreen::data::synth::SynthSpec::text(n, m, 42).generate();
+    println!("workload: {}", ds.describe());
+    let problem = Problem::from_dataset(&ds);
+    let grid = geometric(problem.lambda_max(), 0.05, steps);
+    println!(
+        "path: {} lambdas, lambda_max = {:.4}, down to {:.2}% of lambda_max\n",
+        steps,
+        problem.lambda_max(),
+        100.0 * 0.05
+    );
+
+    let mut rows: Vec<(RuleKind, f64, f64, f64, f64)> = Vec::new();
+    let mut screened_report = None;
+    for rule in [RuleKind::None, RuleKind::Sphere, RuleKind::BallEq, RuleKind::Paper] {
+        let cfg = PathConfig { rule, ..Default::default() };
+        let rep = run_path(&problem, &grid, &cfg)?;
+        let t = rep.totals();
+        println!(
+            "rule={:<7} total {:>8.3}s  (screen {:>7.3}s solve {:>8.3}s)  mean rejection {:>5.1}%",
+            rule.name(),
+            rep.total_seconds,
+            t.screen_seconds,
+            t.solve_seconds,
+            100.0 * t.mean_rejection
+        );
+        rows.push((
+            rule,
+            rep.total_seconds,
+            t.screen_seconds,
+            t.solve_seconds,
+            t.mean_rejection,
+        ));
+        if rule == RuleKind::Paper {
+            screened_report = Some(rep);
+        }
+    }
+
+    // T1-style speedup table.
+    let baseline = rows[0].1;
+    let mut t1 = Table::new(
+        "T1: end-to-end path time (paper-shaped: safe rules preserve the path, \
+         paper rule fastest)",
+        &["rule", "total_s", "screen_s", "solve_s", "mean_reject%", "speedup"],
+    );
+    for (rule, total, screen, solve, rej) in &rows {
+        t1.row(&[
+            rule.name().to_string(),
+            format!("{total:.3}"),
+            format!("{screen:.3}"),
+            format!("{solve:.3}"),
+            format!("{:.1}", 100.0 * rej),
+            format!("{:.2}x", baseline / total),
+        ]);
+    }
+    println!("\n{t1}");
+
+    // F1-style rejection curve for the paper rule.
+    let rep = screened_report.unwrap();
+    let mut f1 = Table::new(
+        "F1: rejection ratio along the path (paper rule)",
+        &["lambda/lmax", "screened", "kept", "reject%", "nnz"],
+    );
+    for s in &rep.steps {
+        f1.row(&[
+            format!("{:.4}", s.lambda_frac),
+            s.screened.to_string(),
+            s.kept.to_string(),
+            format!("{:.1}", 100.0 * s.rejection),
+            s.nnz.to_string(),
+        ]);
+    }
+    println!("{f1}");
+
+    // CSV artifacts for the experiment log.
+    let rows_csv: Vec<Vec<String>> = rep.steps.iter().map(|s| s.row().to_vec()).collect();
+    svmscreen::report::csv::write_file(
+        "target/experiments/path_screening_f1.csv",
+        &svmscreen::path::stats::PathStep::header(),
+        &rows_csv,
+    )?;
+    println!("wrote target/experiments/path_screening_f1.csv");
+    Ok(())
+}

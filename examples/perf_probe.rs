@@ -1,0 +1,35 @@
+//! Perf probe: the §Perf measurement workloads (EXPERIMENTS.md).
+//! Run after any hot-path change:
+//! `cargo run --release --example perf_probe`
+
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::report::timer::BenchStats;
+use svmscreen::screening::rule::{screen_all, RuleKind};
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+use svmscreen::svm::problem::Problem;
+fn main() {
+    let ds = SynthSpec::text(2000, 20000, 42).generate();
+    let p = Problem::from_dataset(&ds);
+    let lam = 0.2 * p.lambda_max();
+    // CD solve cold
+    let s = BenchStats::measure(1, 3, || {
+        let r = solve(SolverKind::Cd, &p.x, &p.y, lam, None, &SolveOptions::default()).unwrap();
+        assert!(r.converged);
+    });
+    println!("cd-solve-cold text-2k-20k @0.2lmax: {}", s.display());
+    // screening pass
+    let th = p.theta_at_lambda_max().theta();
+    let s = BenchStats::measure(2, 10, || {
+        screen_all(RuleKind::Paper, &p.x, &p.y, &th, p.lambda_max(), 0.5 * p.lambda_max()).unwrap();
+    });
+    println!("screen-native text-2k-20k: {} ({:.0} feat/s)", s.display(), 20000.0 / s.median());
+    // dense CD
+    let ds = SynthSpec::dense(1000, 2000, 43).generate();
+    let p = Problem::from_dataset(&ds);
+    let lam = 0.2 * p.lambda_max();
+    let s = BenchStats::measure(1, 3, || {
+        let r = solve(SolverKind::Cd, &p.x, &p.y, lam, None, &SolveOptions::default()).unwrap();
+        assert!(r.converged);
+    });
+    println!("cd-solve-cold dense-1k-2k @0.2lmax: {}", s.display());
+}

@@ -1,0 +1,76 @@
+//! Native vs AOT/PJRT screening: decision agreement and timing on the
+//! same workload — the three-layer architecture exercised end to end
+//! (rust coordinator → compiled JAX/Pallas HLO via PJRT).
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example pjrt_compare
+//! ```
+
+use std::time::Instant;
+use svmscreen::prelude::*;
+use svmscreen::runtime::{screen_all_pjrt, PjrtEngine, PjrtScreenOptions};
+use svmscreen::screening::rule::screen_all;
+
+fn main() -> Result<()> {
+    let dir = PjrtEngine::default_dir();
+    if !dir.exists() {
+        eprintln!("artifact dir {dir:?} missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let t0 = Instant::now();
+    let engine = PjrtEngine::load(&dir)?;
+    println!("engine loaded in {:.2}s: {engine:?}", t0.elapsed().as_secs_f64());
+
+    let ds = svmscreen::data::synth::SynthSpec::text(1000, 8000, 11).generate();
+    println!("workload: {}", ds.describe());
+    let p = Problem::from_dataset(&ds);
+    let theta1 = p.theta_at_lambda_max().theta();
+    let l1 = p.lambda_max();
+
+    for frac in [0.9, 0.6, 0.3] {
+        let l2 = frac * l1;
+        let t = Instant::now();
+        let native = screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, l1, l2)?;
+        let t_native = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let pjrt = screen_all_pjrt(
+            &engine,
+            &p.x,
+            &p.y,
+            &theta1,
+            l1,
+            l2,
+            &PjrtScreenOptions::default(),
+        )?;
+        let t_pjrt = t.elapsed().as_secs_f64();
+        let agree = native
+            .keep
+            .iter()
+            .zip(&pjrt.keep)
+            .filter(|(a, b)| a == b)
+            .count();
+        let unsafe_drops = native
+            .keep
+            .iter()
+            .zip(&pjrt.keep)
+            .filter(|(n, p)| **n && !**p)
+            .count();
+        println!(
+            "lambda2 = {frac:.1}·lmax | native: {:5} screened in {:7.1}ms | \
+             pjrt: {:5} screened in {:7.1}ms | agree {agree}/{} | \
+             native-kept-but-pjrt-dropped: {unsafe_drops} (must be 0)",
+            native.n_screened(),
+            1e3 * t_native,
+            pjrt.n_screened(),
+            1e3 * t_pjrt,
+            p.m(),
+        );
+        assert_eq!(unsafe_drops, 0, "PJRT must keep a superset (keep margin)");
+    }
+    println!("\nnote: the PJRT path runs the Pallas kernel in interpret mode on");
+    println!("CPU — its wallclock is a correctness demo, not a TPU perf proxy");
+    println!("(see DESIGN.md §Hardware-Adaptation for the TPU estimate).");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Safety audit (T2): for every rule and dataset family, solve to a
+//! 1e−9 duality gap and verify that no screened feature is active at
+//! the optimum. Safe rules must report **zero** violations; the strong
+//! rule is the unsafe comparator and may violate.
+//!
+//! ```bash
+//! cargo run --release --example safety_audit
+//! ```
+
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::prelude::*;
+use svmscreen::report::table::Table;
+use svmscreen::screening::rule::{screen_all, RuleKind};
+use svmscreen::solver::api::{solve, SolveOptions};
+
+fn main() -> Result<()> {
+    let specs = [
+        SynthSpec::dense(150, 120, 1001),
+        SynthSpec::text(200, 500, 1002),
+        SynthSpec::corr(120, 100, 1003),
+    ];
+    let fracs = [0.95, 0.8, 0.6, 0.4, 0.2];
+    let rules =
+        [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong];
+
+    let mut table = Table::new(
+        "T2: safety audit (violations MUST be 0 for safe rules)",
+        &["dataset", "rule", "checked", "screened", "violations", "min margin"],
+    );
+
+    for spec in specs {
+        let p = Problem::from_dataset(&spec.generate());
+        // Screen from an *interior* dual point (λ₁ = 0.8·λ_max, solved to
+        // 1e-9): at λ_max the half-space normal degenerates to ∝y and the
+        // paper rule coincides with the ball rule; the interior point is
+        // where the full geometry engages.
+        let lambda1 = 0.8 * p.lambda_max();
+        let at_l1 = solve(
+            SolverKind::Cd,
+            &p.x,
+            &p.y,
+            lambda1,
+            None,
+            &SolveOptions::precise(),
+        )?;
+        assert!(at_l1.converged);
+        let theta1 = svmscreen::svm::dual::theta_from_primal(
+            &p.x, &p.y, &at_l1.w, at_l1.b, lambda1,
+        );
+        for rule in rules {
+            let mut screened_total = 0usize;
+            let mut violations = 0usize;
+            let mut min_margin = f64::INFINITY;
+            for &frac in &fracs {
+                let lambda2 = frac * lambda1;
+                let exact = solve(
+                    SolverKind::Cd,
+                    &p.x,
+                    &p.y,
+                    lambda2,
+                    None,
+                    &SolveOptions::precise(),
+                )?;
+                assert!(exact.converged, "precise solve failed");
+                let rep = screen_all(rule, &p.x, &p.y, &theta1, lambda1, lambda2)?;
+                // Bound tightness: how close do kept-feature bounds come
+                // to the threshold (margin below 1 = how much slack the
+                // screened features had).
+                for j in 0..p.m() {
+                    if !rep.keep[j] {
+                        screened_total += 1;
+                        if rep.bounds[j].is_finite() {
+                            min_margin = min_margin.min(1.0 - rep.bounds[j]);
+                        }
+                        if exact.w[j].abs() > 1e-7 {
+                            violations += 1;
+                        }
+                    }
+                }
+            }
+            if rule.is_safe() {
+                assert_eq!(
+                    violations, 0,
+                    "SAFETY VIOLATION: rule {} on {}",
+                    rule.name(),
+                    p.name
+                );
+            }
+            table.row(&[
+                p.name.clone(),
+                rule.name().to_string(),
+                (fracs.len() * p.m()).to_string(),
+                screened_total.to_string(),
+                violations.to_string(),
+                if min_margin.is_finite() {
+                    format!("{min_margin:.4}")
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+    }
+    println!("{table}");
+    println!("all safe rules: 0 violations ✔");
+    Ok(())
+}

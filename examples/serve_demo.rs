@@ -1,0 +1,104 @@
+//! Screening-as-a-service demo: starts the batched screening server
+//! in-process, drives it with concurrent clients exploring different λ,
+//! and reports latency + batching behaviour (T5's workload).
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+
+use std::time::Instant;
+use svmscreen::coordinator::batcher::BatchPolicy;
+use svmscreen::coordinator::protocol::Json;
+use svmscreen::coordinator::server::{Client, ScreeningServer, ServerConfig};
+use svmscreen::prelude::*;
+use svmscreen::report::timer::BenchStats;
+
+fn main() -> Result<()> {
+    let ds = svmscreen::data::synth::SynthSpec::text(1000, 10000, 77).generate();
+    println!("serving {}", ds.describe());
+    let problem = Problem::from_dataset(&ds);
+    let lmax = problem.lambda_max();
+
+    let server = ScreeningServer::start(
+        problem,
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: 16,
+                window: std::time::Duration::from_millis(4),
+            },
+            ..Default::default()
+        },
+    )?;
+    let addr = server.addr;
+    println!("listening on {addr}");
+
+    // Move the dual point into the interior so screening is interesting.
+    let mut c = Client::connect(addr)?;
+    let sol = c.request(&Json::obj(vec![
+        ("cmd", Json::Str("solve".into())),
+        ("lambda", Json::Num(0.7 * lmax)),
+    ]))?;
+    println!(
+        "server solved lambda1 = 0.7 lmax: nnz = {}, gap = {:?}",
+        sol.get("nnz").unwrap().as_f64().unwrap(),
+        sol.get("rel_gap").unwrap().as_f64().unwrap()
+    );
+
+    // 8 concurrent clients, each sweeping its own lambda ladder.
+    let t0 = Instant::now();
+    let lambda1 = 0.7 * lmax;
+    let handles: Vec<_> = (0..8)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).expect("connect");
+                let mut latencies = Vec::new();
+                let mut batch_sizes = Vec::new();
+                for step in 0..12 {
+                    // Each client walks its own ladder strictly below λ₁.
+                    let frac = 0.95 - 0.06 * step as f64 - 0.005 * k as f64;
+                    let t = Instant::now();
+                    let rep = c
+                        .request(&Json::obj(vec![
+                            ("cmd", Json::Str("screen".into())),
+                            ("lambda2", Json::Num(frac * lambda1)),
+                        ]))
+                        .expect("request");
+                    assert_eq!(
+                        rep.get("ok"),
+                        Some(&Json::Bool(true)),
+                        "screen failed: {rep:?}"
+                    );
+                    latencies.push(t.elapsed().as_secs_f64());
+                    batch_sizes.push(
+                        rep.get("batch_size").and_then(|v| v.as_f64()).unwrap_or(1.0),
+                    );
+                }
+                (latencies, batch_sizes)
+            })
+        })
+        .collect();
+
+    let mut all_lat = Vec::new();
+    let mut all_batch = Vec::new();
+    for h in handles {
+        let (lat, bat) = h.join().expect("client thread");
+        all_lat.extend(lat);
+        all_batch.extend(bat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = BenchStats::from_samples(all_lat);
+    let mean_batch: f64 = all_batch.iter().sum::<f64>() / all_batch.len() as f64;
+    let (screens, batches, solves) = server.metrics();
+    println!(
+        "served {screens} screen requests in {batches} batches ({solves} solves) \
+         over {wall:.2}s"
+    );
+    println!("request latency: {}", stats.display());
+    println!("mean batch size: {mean_batch:.2} (window 4ms, max 16)");
+    println!(
+        "throughput: {:.0} screen requests/s",
+        screens as f64 / wall
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids, ``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact names encode their shapes so the rust registry needs no side
+manifest:
+
+    screen_n{N}_b{B}.hlo.txt   — screen_pass for (B, N) feature blocks
+    grad_n{N}_m{M}.hlo.txt     — svm_grad for an (N, M) dense problem
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# The compiled shape registry. The rust runtime pads inputs up to the
+# nearest compiled shape, so a small set covers the experiments.
+SCREEN_SHAPES = [
+    (256, 256),  # (n, block_m)
+    (1024, 256),
+    (4096, 256),
+]
+GRAD_SHAPES = [
+    (256, 512),  # (n, m)
+    (1024, 2048),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(path: str, jitted, args) -> int:
+    lowered = jitted.lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        choices=["screen", "grad", "all"],
+        default="all",
+        help="subset of artifacts to build",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    total = 0
+    if ns.only in ("screen", "all"):
+        for n, block_m in SCREEN_SHAPES:
+            jitted, args = model.jit_screen_pass(n, block_m)
+            path = os.path.join(ns.out_dir, f"screen_n{n}_b{block_m}.hlo.txt")
+            size = emit(path, jitted, args)
+            print(f"wrote {path} ({size} chars)")
+            total += 1
+    if ns.only in ("grad", "all"):
+        for n, m in GRAD_SHAPES:
+            jitted, args = model.jit_svm_grad(n, m)
+            path = os.path.join(ns.out_dir, f"grad_n{n}_m{m}.hlo.txt")
+            size = emit(path, jitted, args)
+            print(f"wrote {path} ({size} chars)")
+            total += 1
+    print(f"{total} artifacts in {ns.out_dir} (jax {jax.__version__})")
+
+
+if __name__ == "__main__":
+    main()

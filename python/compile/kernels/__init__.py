@@ -1,0 +1,2 @@
+"""L1 Pallas kernels: screening bound (screen.py), solver gradient
+panels (svm.py), and the pure-jnp oracle (ref.py)."""

@@ -1,0 +1,149 @@
+"""Pure-jnp oracle for the L1 kernels — the build-time correctness signal.
+
+``screen_bounds_ref`` recomputes the screening bound with plain jnp ops in
+float64 (when x64 is enabled by the caller), structured as directly as
+possible from the paper's formulas so a divergence between kernel and
+oracle localizes to the kernel's fusion/tiling, not the math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_COS_EPS = 1e-9
+_ZERO_EPS = 1e-14
+_TINY = 1e-30
+
+
+def shared_scalars(y, theta1, lambda1, lambda2):
+    """Feature-independent scalars as a dict (float64-friendly)."""
+    y = jnp.asarray(y)
+    theta1 = jnp.asarray(theta1)
+    n = y.shape[0]
+    inv1 = 1.0 / lambda1
+    inv2 = 1.0 / lambda2
+    a_raw = theta1 - inv1
+    b = 0.5 * (inv2 - theta1)
+    ysq = jnp.sum(y * y)
+    na = jnp.sqrt(jnp.sum(a_raw * a_raw))
+    has_a = bool(na > 1e-12 * (1.0 + inv1 * float(n) ** 0.5))
+    a = a_raw / na if has_a else jnp.zeros_like(a_raw)
+    out = dict(
+        inv1=inv1,
+        inv2=inv2,
+        n=float(n),
+        ysq=ysq,
+        na=na,
+        has_a=has_a,
+        a_y=jnp.sum(a * y),
+        a_1=jnp.sum(a),
+        a_t=jnp.sum(a * theta1),
+        a_b=jnp.sum(a * b),
+        b_y=jnp.sum(b * y),
+        b_sq=jnp.sum(b * b),
+    )
+    out["pya_sq"] = (
+        jnp.maximum(1.0 - out["a_y"] ** 2 / ysq, 0.0) if has_a else jnp.asarray(0.0)
+    )
+    out["pyb_sq"] = jnp.maximum(out["b_sq"] - out["b_y"] ** 2 / ysq, 0.0)
+    out["pya_pyb"] = out["a_b"] - out["a_y"] * out["b_y"] / ysq
+    out["pay_sq"] = jnp.maximum(ysq - out["a_y"] ** 2, 0.0) if has_a else ysq
+    out["pa1_sq"] = (
+        jnp.maximum(float(n) - out["a_1"] ** 2, 0.0) if has_a else jnp.asarray(float(n))
+    )
+    out["pa1_pay"] = jnp.sum(y) - out["a_1"] * out["a_y"]
+    pay_sq = out["pay_sq"]
+    out["ppay_pa1_sq"] = jnp.where(
+        pay_sq > 0.0,
+        jnp.maximum(
+            out["pa1_sq"] - out["pa1_pay"] ** 2 / jnp.where(pay_sq > 0, pay_sq, 1.0),
+            0.0,
+        ),
+        out["pa1_sq"],
+    )
+    return out
+
+
+def _neg_min_ref(dy, d1, dt, q, s):
+    ysq = s["ysq"]
+    pyf_sq = jnp.maximum(q - dy * dy / ysq, 0.0)
+    degenerate = pyf_sq <= _ZERO_EPS * jnp.maximum(q, 1.0)
+
+    if s["has_a"]:
+        a_f = (dt - s["inv1"] * d1) / s["na"]
+    else:
+        a_f = jnp.zeros_like(dt)
+    pya_pyf = a_f - s["a_y"] * dy / ysq
+
+    denom = jnp.sqrt(jnp.maximum(s["pya_sq"] * pyf_sq, 0.0))
+    cos = jnp.where(denom > 0.0, pya_pyf / jnp.maximum(denom, _TINY), 0.0)
+    case1 = s["has_a"] & (s["pya_sq"] > _ZERO_EPS) & (cos >= 1.0 - _COS_EPS)
+    m_colinear = -jnp.sqrt(pyf_sq / jnp.maximum(s["pya_sq"], _TINY)) * s["a_t"]
+
+    b_f = 0.5 * (s["inv2"] * d1 - dt)
+    pyb_pyf = b_f - s["b_y"] * dy / ysq
+    m_ball = jnp.sqrt(jnp.maximum(s["pyb_sq"] * pyf_sq, 0.0)) - pyb_pyf - dt
+
+    cond = s["pya_pyb"] / jnp.sqrt(jnp.maximum(s["pyb_sq"], _TINY)) - pya_pyf / jnp.sqrt(
+        jnp.maximum(pyf_sq, _TINY)
+    )
+    use_ball = (
+        (not s["has_a"])
+        | (s["pya_sq"] <= _ZERO_EPS)
+        | (s["pyb_sq"] <= _ZERO_EPS)
+        | (cond >= 0.0)
+    )
+
+    paf_sq = jnp.maximum(q - a_f * a_f, 0.0)
+    paf_pay = dy - a_f * s["a_y"]
+    paf_pa1 = d1 - a_f * s["a_1"]
+    pay_ok = s["pay_sq"] > _ZERO_EPS
+    ppf_sq = jnp.where(
+        pay_ok,
+        jnp.maximum(paf_sq - paf_pay**2 / jnp.maximum(s["pay_sq"], _TINY), 0.0),
+        paf_sq,
+    )
+    pp1_ppf = jnp.where(
+        pay_ok,
+        paf_pa1 - paf_pay * s["pa1_pay"] / jnp.maximum(s["pay_sq"], _TINY),
+        paf_pa1,
+    )
+    delta = 0.5 * (s["inv2"] - s["inv1"])
+    m_plane = (
+        delta * (jnp.sqrt(jnp.maximum(ppf_sq * s["ppay_pa1_sq"], 0.0)) - pp1_ppf) - dt
+    )
+
+    m = jnp.where(case1, m_colinear, jnp.where(use_ball, m_ball, m_plane))
+    return jnp.where(degenerate, 0.0, m)
+
+
+def screen_bounds_ref(xhat, y, theta1, lambda1, lambda2):
+    """Oracle screening bounds: (m,) array, keep iff >= 1."""
+    xhat = jnp.asarray(xhat)
+    y = jnp.asarray(y)
+    theta1 = jnp.asarray(theta1)
+    s = shared_scalars(y, theta1, lambda1, lambda2)
+    dy = xhat @ y
+    d1 = jnp.sum(xhat, axis=1)
+    dt = xhat @ theta1
+    q = jnp.sum(xhat * xhat, axis=1)
+    m_pos = _neg_min_ref(dy, d1, dt, q, s)
+    m_neg = _neg_min_ref(-dy, -d1, -dt, q, s)
+    return jnp.maximum(m_pos, m_neg)
+
+
+def svm_grad_ref(x, y, w, b):
+    """Oracle for the L2 gradient graph.
+
+    Returns (grad_w, grad_b, loss) for h(w,b) = 0.5*sum(relu(1-y(xw+b))^2).
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    w = jnp.asarray(w)
+    z = x @ w + b
+    xi = jnp.maximum(1.0 - y * z, 0.0)
+    u = xi * y
+    gw = -(x.T @ u)
+    gb = -jnp.sum(u)
+    loss = 0.5 * jnp.sum(xi * xi)
+    return gw, gb, loss

@@ -1,0 +1,246 @@
+"""L1: the Pallas screening-bound kernel.
+
+Computes, for a block of weighted features (rows of ``xhat``), the paper's
+screening bound ``u_j = max_{theta in K} |theta' fhat_j|`` — Algorithm 1
+with the three KKT cases of Theorems 6.5/6.7/6.9 — entirely on-chip:
+
+  1. the O(m*n) part is one MXU panel matmul ``D = xhat_blk @ V`` with
+     ``V = [y | 1 | theta1 | 0]`` (n x 4, padded to a lane-friendly
+     width), fused with the row-norm reduction ``q = rowsum(xhat_blk**2)``;
+  2. the per-feature case selection and closed forms are ~40 flops of
+     branchless (``jnp.where``) scalar math on the VPU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): BlockSpec tiles the feature
+axis with ``block_m`` rows per grid step; for the artifact shape set
+(n <= 4096) one block is <= 4 MiB of f32 in VMEM. The 24 shared scalars
+(functions of lambda1, lambda2, theta1, y only) ride along as a small
+vector; on a real TPU they would live in SMEM via scalar prefetch.
+
+MUST be lowered with ``interpret=True`` on this CPU-only image — real TPU
+lowering emits a Mosaic custom-call the CPU PJRT client cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Indices into the shared-scalar pack (matches rust SharedContext and
+# ref.py). Total SHARED_LEN slots, zero-padded.
+S_INV1 = 0
+S_INV2 = 1
+S_YSQ = 2
+S_NA = 3
+S_HAS_A = 4
+S_A_Y = 5
+S_A_1 = 6
+S_A_T = 7
+S_B_Y = 8
+S_B_SQ = 9
+S_PYA_SQ = 10
+S_PYB_SQ = 11
+S_PYA_PYB = 12
+S_PAY_SQ = 13
+S_PA1_SQ = 14
+S_PA1_PAY = 15
+S_PPAY_PA1_SQ = 16
+SHARED_LEN = 24
+
+# V panel column layout (padded to 8 columns for lane alignment).
+V_COLS = 8  # [y, ones, theta1, 0, 0, 0, 0, 0]
+
+_COS_EPS = 1e-9
+_ZERO_EPS = 1e-14
+_TINY = 1e-30
+
+
+def _neg_min(dy, d1, dt, q, s):
+    """Branchless neg_min = -min_{theta in K} theta' fhat.
+
+    All arguments are (block_m,) vectors except ``s`` which is the shared
+    scalar pack. Mirrors rust ``screening::paper::neg_min`` exactly.
+    """
+    ysq = s[S_YSQ]
+    pyf_sq = jnp.maximum(q - dy * dy / ysq, 0.0)
+    degenerate = pyf_sq <= _ZERO_EPS * jnp.maximum(q, 1.0)
+
+    has_a = s[S_HAS_A] > 0.5
+    a_f = jnp.where(has_a, (dt - s[S_INV1] * d1) / jnp.maximum(s[S_NA], _TINY), 0.0)
+    pya_pyf = a_f - s[S_A_Y] * dy / ysq
+
+    # Case 1 (Thm 6.5): P_y(fhat) anti-parallel to P_y(a).
+    denom = jnp.sqrt(jnp.maximum(s[S_PYA_SQ] * pyf_sq, 0.0))
+    cos = jnp.where(denom > 0.0, pya_pyf / jnp.maximum(denom, _TINY), 0.0)
+    case1 = has_a & (s[S_PYA_SQ] > _ZERO_EPS) & (cos >= 1.0 - _COS_EPS)
+    m_colinear = -jnp.sqrt(pyf_sq / jnp.maximum(s[S_PYA_SQ], _TINY)) * s[S_A_T]
+
+    # Ball bound (Thm 6.7) — also the safe fallback.
+    b_f = 0.5 * (s[S_INV2] * d1 - dt)
+    pyb_pyf = b_f - s[S_B_Y] * dy / ysq
+    m_ball = jnp.sqrt(jnp.maximum(s[S_PYB_SQ] * pyf_sq, 0.0)) - pyb_pyf - dt
+
+    cond = s[S_PYA_PYB] / jnp.sqrt(jnp.maximum(s[S_PYB_SQ], _TINY)) - pya_pyf / jnp.sqrt(
+        jnp.maximum(pyf_sq, _TINY)
+    )
+    use_ball = (
+        (~has_a)
+        | (s[S_PYA_SQ] <= _ZERO_EPS)
+        | (s[S_PYB_SQ] <= _ZERO_EPS)
+        | (cond >= 0.0)
+    )
+
+    # Case 3 (Thm 6.9, corrected Eq. 97).
+    paf_sq = jnp.maximum(q - a_f * a_f, 0.0)
+    paf_pay = dy - a_f * s[S_A_Y]
+    paf_pa1 = d1 - a_f * s[S_A_1]
+    pay_ok = s[S_PAY_SQ] > _ZERO_EPS
+    ppf_sq = jnp.where(
+        pay_ok,
+        jnp.maximum(paf_sq - paf_pay * paf_pay / jnp.maximum(s[S_PAY_SQ], _TINY), 0.0),
+        paf_sq,
+    )
+    pp1_ppf = jnp.where(
+        pay_ok,
+        paf_pa1 - paf_pay * s[S_PA1_PAY] / jnp.maximum(s[S_PAY_SQ], _TINY),
+        paf_pa1,
+    )
+    delta = 0.5 * (s[S_INV2] - s[S_INV1])
+    m_plane = (
+        delta * (jnp.sqrt(jnp.maximum(ppf_sq * s[S_PPAY_PA1_SQ], 0.0)) - pp1_ppf) - dt
+    )
+
+    m = jnp.where(case1, m_colinear, jnp.where(use_ball, m_ball, m_plane))
+    return jnp.where(degenerate, 0.0, m)
+
+
+def _screen_kernel(xhat_ref, v_ref, s_ref, u_ref):
+    """One grid step: bound for ``block_m`` features.
+
+    xhat_ref: (block_m, n) f32 — weighted features, row-major.
+    v_ref:    (n, V_COLS) f32 — [y | 1 | theta1 | 0...] panel.
+    s_ref:    (SHARED_LEN,) f32 — shared scalar pack.
+    u_ref:    (block_m,) f32 — output bounds.
+    """
+    xb = xhat_ref[...]
+    v = v_ref[...]
+    s = s_ref[...]
+    # MXU: panel matmul (block_m, n) @ (n, 8); f32 accumulation.
+    d = jnp.dot(xb, v, preferred_element_type=jnp.float32)
+    # VPU: fused row norm.
+    q = jnp.sum(xb * xb, axis=1)
+    dy, d1, dt = d[:, 0], d[:, 1], d[:, 2]
+    m_pos = _neg_min(dy, d1, dt, q, s)
+    m_neg = _neg_min(-dy, -d1, -dt, q, s)
+    u_ref[...] = jnp.maximum(m_pos, m_neg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def screen_bounds(xhat, v, shared, *, block_m: int = 256):
+    """Screening bounds for all features (rows of ``xhat``).
+
+    Args:
+      xhat:   (m, n) f32, rows are weighted features ``fhat_j = y * f_j``.
+              Zero-padded rows yield bound 0 (degenerate case) and are
+              therefore decision-neutral.
+      v:      (n, V_COLS) f32 panel ``[y | 1 | theta1 | 0...]``.
+      shared: (SHARED_LEN,) f32 scalar pack (see module constants).
+      block_m: feature rows per grid step (must divide padded m).
+
+    Returns:
+      (m,) f32 bounds; keep feature j iff ``bounds[j] >= 1``.
+    """
+    m, n = xhat.shape
+    if m % block_m != 0:
+        pad = block_m - m % block_m
+        xhat = jnp.pad(xhat, ((0, pad), (0, 0)))
+        m_pad = m + pad
+    else:
+        m_pad = m
+    grid = (m_pad // block_m,)
+    out = pl.pallas_call(
+        _screen_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, V_COLS), lambda i: (0, 0)),
+            pl.BlockSpec((SHARED_LEN,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xhat, v, shared)
+    return out[:m]
+
+
+def pack_v(y, theta1):
+    """Builds the (n, V_COLS) panel from labels and the dual point."""
+    y = jnp.asarray(y, jnp.float32)
+    theta1 = jnp.asarray(theta1, jnp.float32)
+    n = y.shape[0]
+    v = jnp.zeros((n, V_COLS), jnp.float32)
+    v = v.at[:, 0].set(y)
+    v = v.at[:, 1].set(1.0)
+    v = v.at[:, 2].set(theta1)
+    return v
+
+
+def pack_shared(y, theta1, lambda1: float, lambda2: float):
+    """Computes the shared scalar pack in f64 then casts to f32.
+
+    Mirrors rust ``SharedContext::build`` (elementwise sums to avoid the
+    cancellation in ``||theta1 - 1/lambda1||``).
+    """
+    y = jnp.asarray(y, jnp.float64)
+    theta1 = jnp.asarray(theta1, jnp.float64)
+    n = y.shape[0]
+    inv1 = 1.0 / lambda1
+    inv2 = 1.0 / lambda2
+    a_raw = theta1 - inv1
+    b = 0.5 * (inv2 - theta1)
+    ysq = jnp.sum(y * y)
+    na = jnp.sqrt(jnp.sum(a_raw * a_raw))
+    has_a = na > 1e-12 * (1.0 + inv1 * jnp.sqrt(jnp.asarray(float(n))))
+    safe_na = jnp.where(has_a, na, 1.0)
+    a_y = jnp.where(has_a, jnp.sum(a_raw * y) / safe_na, 0.0)
+    a_1 = jnp.where(has_a, jnp.sum(a_raw) / safe_na, 0.0)
+    a_t = jnp.where(has_a, jnp.sum(a_raw * theta1) / safe_na, 0.0)
+    a_b = jnp.where(has_a, jnp.sum(a_raw * b) / safe_na, 0.0)
+    b_y = jnp.sum(b * y)
+    b_sq = jnp.sum(b * b)
+    pya_sq = jnp.where(has_a, jnp.maximum(1.0 - a_y * a_y / ysq, 0.0), 0.0)
+    pyb_sq = jnp.maximum(b_sq - b_y * b_y / ysq, 0.0)
+    pya_pyb = a_b - a_y * b_y / ysq
+    pay_sq = jnp.where(has_a, jnp.maximum(ysq - a_y * a_y, 0.0), ysq)
+    pa1_sq = jnp.where(has_a, jnp.maximum(n - a_1 * a_1, 0.0), float(n))
+    pa1_pay = jnp.where(has_a, jnp.sum(y) - a_1 * a_y, jnp.sum(y))
+    ppay_pa1_sq = jnp.where(
+        pay_sq > 0.0,
+        jnp.maximum(pa1_sq - pa1_pay * pa1_pay / jnp.where(pay_sq > 0, pay_sq, 1.0), 0.0),
+        pa1_sq,
+    )
+    s = jnp.zeros((SHARED_LEN,), jnp.float64)
+    vals = {
+        S_INV1: inv1,
+        S_INV2: inv2,
+        S_YSQ: ysq,
+        S_NA: na,
+        S_HAS_A: jnp.where(has_a, 1.0, 0.0),
+        S_A_Y: a_y,
+        S_A_1: a_1,
+        S_A_T: a_t,
+        S_B_Y: b_y,
+        S_B_SQ: b_sq,
+        S_PYA_SQ: pya_sq,
+        S_PYB_SQ: pyb_sq,
+        S_PYA_PYB: pya_pyb,
+        S_PAY_SQ: pay_sq,
+        S_PA1_SQ: pa1_sq,
+        S_PA1_PAY: pa1_pay,
+        S_PPAY_PA1_SQ: ppay_pa1_sq,
+    }
+    for k, val in vals.items():
+        s = s.at[k].set(val)
+    return s.astype(jnp.float32)

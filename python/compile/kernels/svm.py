@@ -1,0 +1,63 @@
+"""L1: Pallas kernel for the solver's gradient hot-spot.
+
+The FISTA gradient is ``grad_w = -X' (xi o y)`` — a transposed panel
+matvec over feature columns. The kernel tiles the feature axis: each grid
+step loads a (n, block_m) column panel into VMEM and produces block_m
+entries of the gradient via an MXU (1, n) x (n, block_m) product.
+
+interpret=True for CPU-PJRT execution (see screen.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xtv_kernel(x_ref, u_ref, out_ref):
+    """out = X_panel' u for one feature panel.
+
+    x_ref:  (n, block_m) — column panel of X.
+    u_ref:  (n,)         — dense vector.
+    out_ref:(block_m,)
+    """
+    x = x_ref[...]
+    u = u_ref[...]
+    out_ref[...] = jnp.dot(u, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def xtv(x, u, *, block_m: int = 256):
+    """``X' u`` with the feature axis tiled through VMEM.
+
+    Args:
+      x: (n, m) f32 sample-major matrix.
+      u: (n,) f32.
+      block_m: features per grid step (pads m to a multiple).
+
+    Returns:
+      (m,) f32.
+    """
+    n, m = x.shape
+    if m % block_m != 0:
+        pad = block_m - m % block_m
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        m_pad = m + pad
+    else:
+        m_pad = m
+    grid = (m_pad // block_m,)
+    out = pl.pallas_call(
+        _xtv_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_m), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        interpret=True,
+    )(x, u)
+    return out[:m]

@@ -1,0 +1,114 @@
+"""L2: the JAX compute graphs, composing the L1 Pallas kernels.
+
+Two graphs get AOT-lowered for the rust runtime:
+
+* ``screen_pass`` — the full screening pass for one feature block:
+  the Pallas bound kernel over (block_m, n) weighted features, given the
+  [y | 1 | theta1] panel and the shared scalar pack (both produced by the
+  rust coordinator, which owns the path state).
+* ``svm_grad`` — the FISTA gradient/objective step: margins in jnp
+  (O(nnz) elementwise), the feature-axis reduction through the Pallas
+  ``xtv`` panel kernel.
+
+These run at build time only; ``aot.py`` lowers them to HLO text that the
+rust PJRT runtime loads. Nothing in this package is imported at serving
+time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import screen as screen_kernel
+from compile.kernels import svm as svm_kernel
+
+
+def screen_pass(xhat_block, v, shared, *, block_m: int = 256):
+    """Screening bounds for one feature block.
+
+    Args:
+      xhat_block: (block_m, n) f32, rows are weighted features (zero rows
+        are decision-neutral padding).
+      v: (n, V_COLS) f32 panel [y | 1 | theta1 | 0...].
+      shared: (SHARED_LEN,) f32 shared scalar pack.
+
+    Returns:
+      (block_m,) f32 bounds (keep iff >= 1).
+    """
+    return screen_kernel.screen_bounds(xhat_block, v, shared, block_m=block_m)
+
+
+def svm_grad(x, y, w, b):
+    """Gradient + loss of the squared-hinge term h(w, b) (Eq. 23-25).
+
+    Args:
+      x: (n, m) f32 sample-major data.
+      y: (n,) f32 labels (+-1).
+      w: (m,) f32 weights.
+      b: (1,) f32 bias.
+
+    Returns:
+      (grad_w (m,), grad_b (1,), loss (1,)).
+    """
+    z = x @ w + b[0]
+    xi = jnp.maximum(1.0 - y * z, 0.0)
+    u = xi * y
+    gw = -svm_kernel.xtv(x, u)
+    gb = -jnp.sum(u)[None]
+    loss = (0.5 * jnp.sum(xi * xi))[None]
+    return gw, gb, loss
+
+
+def objective(x, y, w, b, lam):
+    """Full primal objective h(w,b) + lam*||w||_1 (shape (1,))."""
+    z = x @ w + b[0]
+    xi = jnp.maximum(1.0 - y * z, 0.0)
+    return (0.5 * jnp.sum(xi * xi) + lam[0] * jnp.sum(jnp.abs(w)))[None]
+
+
+def fista_step(x, y, w, b, v_w, v_b, lam, inv_l, t_mom):
+    """One FISTA step (prox-gradient at the extrapolated point).
+
+    All state flows through so the rust runtime can drive the loop with a
+    single compiled executable per shape.
+
+    Returns (w_new, b_new, v_w_new, v_b_new, t_new, loss_at_v).
+    """
+    gw, gb, loss = svm_grad(x, y, v_w, v_b)
+    step = inv_l[0]
+    w_arg = v_w - step * gw
+    thr = step * lam[0]
+    w_new = jnp.sign(w_arg) * jnp.maximum(jnp.abs(w_arg) - thr, 0.0)
+    b_new = v_b - step * gb
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t_mom[0] * t_mom[0]))
+    beta = (t_mom[0] - 1.0) / t_new
+    v_w_new = w_new + beta * (w_new - w)
+    v_b_new = b_new + beta * (b_new - b)
+    return w_new, b_new, v_w_new, v_b_new, t_new[None], loss
+
+
+def jit_screen_pass(n: int, block_m: int = 256):
+    """Jitted screen_pass closed over static shapes (for AOT lowering)."""
+
+    def fn(xhat_block, v, shared):
+        return (screen_pass(xhat_block, v, shared, block_m=block_m),)
+
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    args = (
+        spec((block_m, n)),
+        spec((n, screen_kernel.V_COLS)),
+        spec((screen_kernel.SHARED_LEN,)),
+    )
+    return jax.jit(fn), args
+
+
+def jit_svm_grad(n: int, m: int):
+    """Jitted svm_grad closed over static shapes (for AOT lowering)."""
+
+    def fn(x, y, w, b):
+        return svm_grad(x, y, w, b)
+
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    args = (spec((n, m)), spec((n,)), spec((m,)), spec((1,)))
+    return jax.jit(fn), args

@@ -1,0 +1,135 @@
+"""Pallas screening kernel vs the pure-jnp oracle — the core build-time
+correctness signal, swept hypothesis-style over shapes and geometries."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, screen
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_case(rng, n, m, frac1=0.7, frac2=0.5, at_lambda_max=False):
+    """A random screening problem: data, labels, a dual-feasible theta1."""
+    y = np.where(rng.random(n) < 0.5, 1.0, -1.0)
+    y[0], y[1] = 1.0, -1.0
+    x = rng.standard_normal((m, n))  # feature-major (rows = features)
+    # column-normalize features
+    x /= np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+    xhat = x * y[None, :]
+    # lambda_max machinery: b* = (n+ - n-)/n, m_vec = fhat' (y - b*) ...
+    n_pos = float((y > 0).sum())
+    b_star = (2.0 * n_pos - n) / n
+    m_vec = xhat @ (np.ones(n) - b_star * y)  # fhat'(1 - b* y) = f'(y - b*)
+    lam_max = np.abs(m_vec).max()
+    lam1 = lam_max if at_lambda_max else frac1 * lam_max
+    lam2 = frac2 * lam_max
+    if at_lambda_max:
+        theta1 = np.maximum(0.0, 1.0 - y * b_star) / lam_max
+    else:
+        # a synthetic dual point: nonnegative, y-orthogonal
+        theta1 = rng.random(n) / lam1
+        sp = theta1[y > 0].sum()
+        sn = theta1[y < 0].sum()
+        t = 0.5 * (sp + sn)
+        theta1[y > 0] *= t / sp
+        theta1[y < 0] *= t / sn
+    return xhat, y, theta1, float(lam1), float(lam2)
+
+
+def run_kernel(xhat, y, theta1, lam1, lam2, block_m=None):
+    v = screen.pack_v(y, theta1)
+    shared = screen.pack_shared(y, theta1, lam1, lam2)
+    kwargs = {}
+    if block_m is not None:
+        kwargs["block_m"] = block_m
+    return screen.screen_bounds(jnp.asarray(xhat, jnp.float32), v, shared, **kwargs)
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("shape", [(16, 8), (64, 32), (128, 300)])
+def test_kernel_matches_oracle(seed, shape):
+    n, m = shape
+    rng = np.random.default_rng(seed)
+    xhat, y, theta1, lam1, lam2 = make_case(rng, n, m)
+    got = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=32))
+    want = np.asarray(
+        ref.screen_bounds_ref(
+            jnp.asarray(xhat, jnp.float64),
+            jnp.asarray(y, jnp.float64),
+            jnp.asarray(theta1, jnp.float64),
+            lam1,
+            lam2,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("at_lambda_max", [True, False])
+def test_kernel_geometry_regimes(at_lambda_max):
+    # at lambda_max the half-space normal degenerates to ~y (ball case
+    # everywhere); interior theta1 exercises the plane case.
+    rng = np.random.default_rng(42)
+    xhat, y, theta1, lam1, lam2 = make_case(
+        rng, 64, 128, at_lambda_max=at_lambda_max
+    )
+    got = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=64))
+    want = np.asarray(
+        ref.screen_bounds_ref(
+            jnp.asarray(xhat, jnp.float64),
+            jnp.asarray(y, jnp.float64),
+            jnp.asarray(theta1, jnp.float64),
+            lam1,
+            lam2,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_padding_rows_are_decision_neutral():
+    # m not a multiple of block_m: padded rows must not leak NaN/garbage
+    # and must produce bound exactly 0 internally (degenerate case).
+    rng = np.random.default_rng(7)
+    xhat, y, theta1, lam1, lam2 = make_case(rng, 32, 50)
+    got = run_kernel(xhat, y, theta1, lam1, lam2, block_m=32)
+    assert got.shape == (50,)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_zero_feature_screened():
+    rng = np.random.default_rng(8)
+    xhat, y, theta1, lam1, lam2 = make_case(rng, 32, 10)
+    xhat[3, :] = 0.0
+    got = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=10))
+    assert got[3] == 0.0
+
+
+def test_y_parallel_feature_screened():
+    # f = const => fhat = const*y: degenerate case. In f32 the
+    # ||P_y(fhat)||^2 cancellation leaves noise ~1e-7, so the kernel may
+    # resolve it via the ball case instead of the exact-0 branch — either
+    # way the bound must be far below the keep threshold of 1.
+    rng = np.random.default_rng(9)
+    xhat, y, theta1, lam1, lam2 = make_case(rng, 32, 10)
+    xhat[5, :] = 0.17 * y
+    got = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=10))
+    assert abs(got[5]) < 0.05
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(10)
+    xhat, y, theta1, lam1, lam2 = make_case(rng, 48, 96)
+    a = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=16))
+    b = np.asarray(run_kernel(xhat, y, theta1, lam1, lam2, block_m=96))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_bounds_shrink_with_smaller_gap():
+    # lambda2 closer to lambda1 => smaller ball => smaller bounds.
+    rng = np.random.default_rng(11)
+    xhat, y, theta1, lam1, _ = make_case(rng, 40, 80)
+    near = np.asarray(run_kernel(xhat, y, theta1, lam1, 0.95 * lam1, block_m=80))
+    far = np.asarray(run_kernel(xhat, y, theta1, lam1, 0.50 * lam1, block_m=80))
+    assert (near <= far + 1e-5).all()

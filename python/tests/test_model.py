@@ -1,0 +1,94 @@
+"""L2 graph tests: gradient vs autodiff, FISTA step semantics, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import svm as svm_kernel
+
+
+def rand_problem(rng, n, m):
+    x = jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, 1.0, -1.0), jnp.float32)
+    w = jnp.asarray(0.1 * rng.standard_normal(m), jnp.float32)
+    b = jnp.asarray([0.2], jnp.float32)
+    return x, y, w, b
+
+
+@pytest.mark.parametrize("shape", [(8, 5), (64, 100), (100, 257)])
+def test_xtv_matches_dense(shape):
+    n, m = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = svm_kernel.xtv(x, u, block_m=64)
+    want = x.T @ u
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_svm_grad_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    x, y, w, b = rand_problem(rng, 40, 30)
+    gw, gb, loss = model.svm_grad(x, y, w, b)
+    gw_ref, gb_ref, loss_ref = ref.svm_grad_ref(x, y, w, float(b[0]))
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(gb[0]), float(gb_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(loss[0]), float(loss_ref), rtol=1e-5)
+
+
+def test_svm_grad_matches_autodiff():
+    rng = np.random.default_rng(5)
+    x, y, w, b = rand_problem(rng, 30, 20)
+
+    def loss_fn(w, b):
+        z = x @ w + b
+        xi = jnp.maximum(1.0 - y * z, 0.0)
+        return 0.5 * jnp.sum(xi * xi)
+
+    gw_ad = jax.grad(loss_fn, argnums=0)(w, b[0])
+    gb_ad = jax.grad(loss_fn, argnums=1)(w, b[0])
+    gw, gb, _ = model.svm_grad(x, y, w, b)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_ad), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(gb[0]), float(gb_ad), rtol=1e-4, atol=1e-4)
+
+
+def test_objective_matches_pieces():
+    rng = np.random.default_rng(6)
+    x, y, w, b = rand_problem(rng, 25, 15)
+    lam = jnp.asarray([0.3], jnp.float32)
+    obj = model.objective(x, y, w, b, lam)
+    _, _, loss = model.svm_grad(x, y, w, b)
+    want = float(loss[0]) + 0.3 * float(jnp.sum(jnp.abs(w)))
+    np.testing.assert_allclose(float(obj[0]), want, rtol=1e-5)
+
+
+def test_fista_step_decreases_objective():
+    rng = np.random.default_rng(7)
+    x, y, w, b = rand_problem(rng, 50, 30)
+    w = jnp.zeros_like(w)
+    lam = jnp.asarray([0.1], jnp.float32)
+    # Lipschitz upper bound: ||[X 1]||_F^2 is safe
+    l = float(jnp.sum(x * x)) + 50.0
+    inv_l = jnp.asarray([1.0 / l], jnp.float32)
+    t_mom = jnp.asarray([1.0], jnp.float32)
+    obj0 = float(model.objective(x, y, w, b, lam)[0])
+    w1, b1, vw1, vb1, t1, _ = model.fista_step(x, y, w, b, w, b, lam, inv_l, t_mom)
+    obj1 = float(model.objective(x, y, w1, b1, lam)[0])
+    assert obj1 <= obj0 + 1e-6, (obj0, obj1)
+    assert float(t1[0]) > 1.0
+    assert vw1.shape == w.shape and vb1.shape == b.shape
+
+
+def test_jit_wrappers_lower():
+    # The AOT entry points must lower without error (cheap smoke; full
+    # HLO emission is exercised by `make artifacts`).
+    jitted, args = model.jit_screen_pass(64, 32)
+    lowered = jitted.lower(*args)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))
+    jitted, args = model.jit_svm_grad(32, 16)
+    lowered = jitted.lower(*args)
+    assert lowered is not None

@@ -1,0 +1,113 @@
+//! Hand-rolled CLI argument parsing (no clap in the vendored crate set).
+//!
+//! Grammar: `svmscreen <subcommand> [--flag value | --switch]...`.
+//! Flags accumulate into a [`crate::config::RawConfig`] so file config
+//! and CLI share one resolution path.
+
+use crate::config::RawConfig;
+use crate::error::{Error, Result};
+
+/// A parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Flags as raw config entries (`--steps 30` → `steps = 30`).
+    pub flags: RawConfig,
+    /// Bare positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+/// Flags that take no value (presence ⇒ `true`).
+const SWITCHES: &[&str] = &["verbose", "indices", "no-normalize", "csv"];
+
+/// Parses an argument vector (without argv[0]).
+pub fn parse_args(args: &[String]) -> Result<Cli> {
+    let mut iter = args.iter().peekable();
+    let command = iter
+        .next()
+        .cloned()
+        .ok_or_else(|| Error::config("missing subcommand; try `svmscreen help`"))?;
+    let mut flags = RawConfig::default();
+    let mut positionals = Vec::new();
+    while let Some(arg) = iter.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            if name.is_empty() {
+                return Err(Error::config("bare `--` not supported"));
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                flags.set(k, v);
+            } else if SWITCHES.contains(&name) {
+                flags.set(name, "true");
+            } else {
+                let value = iter
+                    .next()
+                    .ok_or_else(|| Error::config(format!("--{name} needs a value")))?;
+                flags.set(name, value.clone());
+            }
+        } else {
+            positionals.push(arg.clone());
+        }
+    }
+    Ok(Cli { command, flags, positionals })
+}
+
+/// Usage text for `help` and errors.
+pub const USAGE: &str = "\
+svmscreen — safe screening for sparse SVM (Zhao & Liu, KDD'14)
+
+USAGE:
+  svmscreen <command> [--flag value]...
+
+COMMANDS:
+  info      describe a dataset and its lambda_max
+            --data synth:text:2000:20000:42 | path.svm
+  generate  write a synthetic dataset in libsvm format
+            --data synth:<kind>:<n>:<m>:<seed> --out FILE
+  solve     solve one lambda
+            --data ... --lambda-frac 0.5 [--solver cd|fista] [--tol 1e-6]
+  screen    one screening pass (lambda_max -> lambda2)
+            --data ... --lambda2-frac 0.5 [--rule paper|ball|sphere|strong]
+            [--workers N] [--engine native|pjrt] [--artifacts DIR]
+  path      regularization path with sequential screening
+            --data ... [--steps 30] [--min-frac 0.05] [--rule ...]
+            [--solver ...] [--tol ...] [--csv FILE]
+  serve     start the screening service
+            --data ... [--addr 127.0.0.1:7878] [--workers N]
+  help      this text
+
+Config file: --config FILE (key = value lines; CLI flags override).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let cli = parse_args(&v(&[
+            "path",
+            "--steps",
+            "12",
+            "--rule=ball",
+            "extra",
+            "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, "path");
+        assert_eq!(cli.flags.get("steps"), Some("12"));
+        assert_eq!(cli.flags.get("rule"), Some("ball"));
+        assert_eq!(cli.flags.get("verbose"), Some("true"));
+        assert_eq!(cli.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse_args(&v(&["path", "--steps"])).is_err());
+        assert!(parse_args(&v(&[])).is_err());
+    }
+}

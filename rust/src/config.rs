@@ -1,0 +1,246 @@
+//! Typed run configuration with a TOML-subset file format and CLI
+//! overrides (no serde/toml crates in the vendored set).
+//!
+//! The accepted file syntax: `key = value` lines, `#` comments, bare
+//! strings/numbers/bools. Keys mirror the CLI flags (`--steps 30` ⇔
+//! `steps = 30`).
+
+use crate::error::{Error, Result};
+use crate::path::runner::PathConfig;
+use crate::screening::rule::RuleKind;
+use crate::solver::api::{SolveOptions, SolverKind};
+use std::collections::BTreeMap;
+
+/// Flat key/value configuration source.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parses the TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let v = v.trim().trim_matches('"');
+            values.insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(RawConfig { values })
+    }
+
+    /// Loads from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overrides/sets a key.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    /// String accessor.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// f64 accessor with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("{key}: bad number {v:?}"))),
+        }
+    }
+
+    /// usize accessor with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::config(format!("{key}: bad integer {v:?}"))),
+        }
+    }
+
+    /// bool accessor with default.
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => Err(Error::config(format!("{key}: bad bool {v:?}"))),
+        }
+    }
+}
+
+/// The resolved run configuration shared by CLI subcommands.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Dataset source: `synth:<kind>:<n>:<m>:<seed>` or a libsvm path.
+    pub data: String,
+    /// Screening rule.
+    pub rule: RuleKind,
+    /// Solver.
+    pub solver: SolverKind,
+    /// Path grid size.
+    pub steps: usize,
+    /// Path grid lower endpoint as a fraction of λ_max.
+    pub min_frac: f64,
+    /// Solver tolerance (relative duality gap).
+    pub tol: f64,
+    /// Worker threads for parallel screening / the server.
+    pub workers: usize,
+    /// Execution engine: `native` or `pjrt`.
+    pub engine: String,
+    /// Artifact directory for the PJRT engine.
+    pub artifact_dir: String,
+    /// Server bind address.
+    pub addr: String,
+}
+
+impl RunConfig {
+    /// Resolves from a raw key/value source.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let rule_s = raw.get("rule").unwrap_or("paper");
+        let rule = RuleKind::parse(rule_s)
+            .ok_or_else(|| Error::config(format!("unknown rule {rule_s:?}")))?;
+        let solver_s = raw.get("solver").unwrap_or("cd");
+        let solver = SolverKind::parse(solver_s)
+            .ok_or_else(|| Error::config(format!("unknown solver {solver_s:?}")))?;
+        let engine = raw.get("engine").unwrap_or("native").to_string();
+        if engine != "native" && engine != "pjrt" {
+            return Err(Error::config(format!("unknown engine {engine:?}")));
+        }
+        Ok(RunConfig {
+            data: raw.get("data").unwrap_or("synth:text:2000:20000:42").to_string(),
+            rule,
+            solver,
+            steps: raw.get_usize("steps", 30)?,
+            min_frac: raw.get_f64("min-frac", 0.05)?,
+            tol: raw.get_f64("tol", 1e-6)?,
+            workers: raw
+                .get_usize("workers", crate::coordinator::pool::default_workers())?,
+            engine,
+            artifact_dir: raw.get("artifacts").unwrap_or("artifacts").to_string(),
+            addr: raw.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        })
+    }
+
+    /// The solver options implied by this config.
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions { tol: self.tol, ..Default::default() }
+    }
+
+    /// The path-runner config implied by this config.
+    pub fn path_config(&self) -> PathConfig {
+        PathConfig {
+            rule: self.rule,
+            solver: self.solver,
+            solve: self.solve_options(),
+            ..Default::default()
+        }
+    }
+
+    /// Materializes the dataset described by `data`.
+    pub fn load_dataset(&self) -> Result<crate::data::dataset::Dataset> {
+        if let Some(spec) = self.data.strip_prefix("synth:") {
+            let parts: Vec<&str> = spec.split(':').collect();
+            if parts.len() != 4 {
+                return Err(Error::config(
+                    "synth spec must be synth:<kind>:<n>:<m>:<seed>",
+                ));
+            }
+            let kind = crate::data::synth::SynthKind::parse(parts[0])
+                .ok_or_else(|| Error::config(format!("unknown synth kind {:?}", parts[0])))?;
+            let n: usize = parts[1].parse().map_err(|_| Error::config("bad synth n"))?;
+            let m: usize = parts[2].parse().map_err(|_| Error::config("bad synth m"))?;
+            let seed: u64 =
+                parts[3].parse().map_err(|_| Error::config("bad synth seed"))?;
+            let spec = match kind {
+                crate::data::synth::SynthKind::Dense => {
+                    crate::data::synth::SynthSpec::dense(n, m, seed)
+                }
+                crate::data::synth::SynthKind::Text => {
+                    crate::data::synth::SynthSpec::text(n, m, seed)
+                }
+                crate::data::synth::SynthKind::Corr => {
+                    crate::data::synth::SynthSpec::corr(n, m, seed)
+                }
+            };
+            Ok(spec.generate())
+        } else {
+            crate::data::libsvm::load(&self.data)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_file_syntax() {
+        let raw = RawConfig::parse(
+            "# comment\nsteps = 12\nrule = ball\ndata = \"synth:dense:10:5:1\"\ntol=1e-8\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get_usize("steps", 0).unwrap(), 12);
+        assert_eq!(raw.get("rule"), Some("ball"));
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.rule, RuleKind::BallEq);
+        assert_eq!(cfg.steps, 12);
+        assert_eq!(cfg.tol, 1e-8);
+        let ds = cfg.load_dataset().unwrap();
+        assert_eq!(ds.n(), 10);
+        assert_eq!(ds.m(), 5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RawConfig::parse("novalue\n").is_err());
+        let mut raw = RawConfig::default();
+        raw.set("rule", "bogus");
+        assert!(RunConfig::from_raw(&raw).is_err());
+        let mut raw = RawConfig::default();
+        raw.set("engine", "cuda");
+        assert!(RunConfig::from_raw(&raw).is_err());
+        let mut raw = RawConfig::default();
+        raw.set("steps", "abc");
+        assert!(RunConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn defaults_resolve() {
+        let cfg = RunConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(cfg.rule, RuleKind::Paper);
+        assert_eq!(cfg.solver, SolverKind::Cd);
+        assert_eq!(cfg.engine, "native");
+        assert!(cfg.workers >= 1);
+    }
+
+    #[test]
+    fn bool_accessor() {
+        let raw = RawConfig::parse("a = true\nb = 0\n").unwrap();
+        assert!(raw.get_bool("a", false).unwrap());
+        assert!(!raw.get_bool("b", true).unwrap());
+        assert!(raw.get_bool("c", true).unwrap());
+    }
+
+    #[test]
+    fn bad_synth_specs() {
+        for data in ["synth:text:10", "synth:nope:1:2:3", "synth:text:a:2:3"] {
+            let mut raw = RawConfig::default();
+            raw.set("data", data);
+            let cfg = RunConfig::from_raw(&raw).unwrap();
+            assert!(cfg.load_dataset().is_err(), "{data}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Request batching with a size/deadline policy.
+//!
+//! The screening service amortizes the O(nnz) stats-panel sweep across
+//! concurrent requests that share the same source dual point (θ₁): the
+//! batcher collects requests for up to `max_batch` items or
+//! `window` (whichever first), and the executor screens the whole batch
+//! in one pass via [`crate::screening::rule::screen_multi`].
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are queued.
+    pub max_batch: usize,
+    /// Flush when the oldest queued request has waited this long.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, window: Duration::from_millis(5) }
+    }
+}
+
+/// Blocks for the next batch: waits indefinitely for the first item,
+/// then drains until the policy triggers. Returns an empty vec when the
+/// channel is closed and drained.
+pub fn next_batch<R>(rx: &Receiver<R>, policy: &BatchPolicy) -> Vec<R> {
+    let mut batch = Vec::new();
+    // Block for the first item.
+    match rx.recv() {
+        Ok(item) => batch.push(item),
+        Err(_) => return batch,
+    }
+    let deadline = Instant::now() + policy.window;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, window: Duration::from_secs(10) };
+        let b = next_batch(&rx, &policy);
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, &policy);
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_on_window() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let policy = BatchPolicy { max_batch: 100, window: Duration::from_millis(20) };
+        let b = next_batch(&rx, &policy);
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn empty_on_disconnect() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        let b = next_batch(&rx, &BatchPolicy::default());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn late_arrivals_within_window_join() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+        });
+        let policy = BatchPolicy { max_batch: 10, window: Duration::from_millis(50) };
+        let b = next_batch(&rx, &policy);
+        handle.join().unwrap();
+        assert_eq!(b.len(), 2);
+    }
+}

@@ -1,0 +1,87 @@
+//! Feature-block partitioning for the parallel screening executor.
+
+use crate::data::FeatureMatrix;
+use std::ops::Range;
+
+/// Fixed-size blocks covering `0..m`.
+pub fn fixed(m: usize, block: usize) -> Vec<Range<usize>> {
+    assert!(block > 0);
+    let mut out = Vec::with_capacity(m.div_ceil(block));
+    let mut j = 0;
+    while j < m {
+        out.push(j..(j + block).min(m));
+        j += block;
+    }
+    out
+}
+
+/// nnz-balanced blocks: contiguous ranges whose total non-zeros are
+/// approximately equal, so sparse text data with skewed column sizes
+/// (Zipf!) doesn't leave workers idle.
+pub fn balanced<X: FeatureMatrix>(x: &X, n_blocks: usize) -> Vec<Range<usize>> {
+    let m = x.n_features();
+    let n_blocks = n_blocks.max(1).min(m.max(1));
+    if m == 0 {
+        return Vec::new();
+    }
+    // +1 per column so all-zero stretches still split.
+    let total: usize = (0..m).map(|j| x.col_nnz(j) + 1).sum();
+    let target = total.div_ceil(n_blocks);
+    let mut out = Vec::with_capacity(n_blocks);
+    let mut start = 0;
+    let mut acc = 0usize;
+    for j in 0..m {
+        acc += x.col_nnz(j) + 1;
+        if acc >= target && out.len() + 1 < n_blocks {
+            out.push(start..j + 1);
+            start = j + 1;
+            acc = 0;
+        }
+    }
+    if start < m {
+        out.push(start..m);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn fixed_covers_exactly() {
+        let blocks = fixed(10, 3);
+        assert_eq!(blocks, vec![0..3, 3..6, 6..9, 9..10]);
+        assert_eq!(fixed(0, 4).len(), 0);
+    }
+
+    #[test]
+    fn balanced_covers_and_balances() {
+        let ds = SynthSpec::text(80, 500, 131).generate();
+        let blocks = balanced(&ds.x, 8);
+        // coverage: contiguous, disjoint, complete
+        let mut next = 0;
+        for b in &blocks {
+            assert_eq!(b.start, next);
+            next = b.end;
+        }
+        assert_eq!(next, 500);
+        // balance: max block nnz within 3x of min (Zipf data is rough)
+        let nnz: Vec<usize> = blocks
+            .iter()
+            .map(|b| b.clone().map(|j| ds.x.col_nnz(j)).sum())
+            .collect();
+        let max = *nnz.iter().max().unwrap();
+        let min = *nnz.iter().min().unwrap();
+        assert!(max <= 3 * min.max(1) + 200, "imbalance {nnz:?}");
+    }
+
+    #[test]
+    fn balanced_more_blocks_than_features() {
+        let ds = SynthSpec::dense(5, 3, 133).generate();
+        let blocks = balanced(&ds.x, 10);
+        assert!(blocks.len() <= 3);
+        assert_eq!(blocks.last().unwrap().end, 3);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordination: worker pool, feature-block partitioning, the
+//! block-parallel screening executor, the request batcher and the
+//! screening service.
+//!
+//! The vendored crate set has no tokio, so the coordinator is built on
+//! std threads: a scoped work-stealing-lite [`pool::parallel_map`] for
+//! compute fan-out, a persistent [`pool::ThreadPool`] for connection
+//! handling, and blocking channels with deadlines for the batcher.
+
+pub mod batcher;
+pub mod blocks;
+pub mod parallel;
+pub mod pool;
+pub mod protocol;
+pub mod server;
+
+pub use parallel::screen_all_parallel;
+pub use pool::{parallel_map, ThreadPool};

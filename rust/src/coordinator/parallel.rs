@@ -1,0 +1,119 @@
+//! Block-parallel screening: the multi-worker version of Algorithm 1.
+//!
+//! The screening pass is embarrassingly parallel across features — the
+//! shared context is read-only — so the executor partitions features
+//! into nnz-balanced blocks and fans out over [`super::pool::parallel_map`].
+
+use crate::coordinator::blocks;
+use crate::coordinator::pool::parallel_map;
+use crate::data::FeatureMatrix;
+use crate::error::Result;
+use crate::screening::precompute::{FeatureStats, SharedContext};
+use crate::screening::rule::{Rule, RuleKind, ScreenReport, ScreeningRule, KEEP_THRESHOLD};
+
+/// Minimum `nnz + m` for which multi-threaded screening pays for its
+/// thread-spawn cost (measured on this container: a 50k-feature sparse
+/// pass runs ~1 ms single-threaded).
+pub const PARALLEL_WORK_THRESHOLD: usize = 1_000_000;
+
+/// Parallel counterpart of [`crate::screening::rule::screen_all`].
+///
+/// `workers = 1` degrades to the sequential path (and is bit-identical
+/// to `screen_all` — asserted in tests). Fan-out only engages when the
+/// estimated work (`nnz + m`) clears [`PARALLEL_WORK_THRESHOLD`]: below
+/// it the whole pass costs well under a millisecond and thread spawning
+/// dominates (EXPERIMENTS.md §Perf P5).
+pub fn screen_all_parallel<X: FeatureMatrix + Sync>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2: f64,
+    workers: usize,
+) -> Result<ScreenReport> {
+    let t0 = std::time::Instant::now();
+    let m = x.n_features();
+    let mut keep = vec![true; m];
+    let mut bounds = vec![f64::INFINITY; m];
+    let work = x.nnz() + m;
+    let workers = if work < PARALLEL_WORK_THRESHOLD { 1 } else { workers.max(1) };
+    if rule != RuleKind::None && m > 0 {
+        let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
+        let r = Rule(rule);
+        let ranges = blocks::balanced(x, workers * 4);
+        let results = parallel_map(&ranges, workers, |range| {
+            let mut local = Vec::with_capacity(range.len());
+            for j in range.clone() {
+                let s = FeatureStats::compute(x, j, y, &ctx.ytheta1);
+                local.push(r.score(&ctx, &s));
+            }
+            local
+        });
+        for (range, local) in ranges.iter().zip(results) {
+            for (j, score) in range.clone().zip(local) {
+                bounds[j] = score;
+                keep[j] = score >= KEEP_THRESHOLD;
+            }
+        }
+    }
+    Ok(ScreenReport {
+        rule,
+        lambda1,
+        lambda2,
+        keep,
+        bounds,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::screening::rule::screen_all;
+    use crate::svm::problem::Problem;
+
+    #[test]
+    fn parallel_matches_sequential_exactly() {
+        let p = Problem::from_dataset(&SynthSpec::text(80, 400, 141).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        for frac in [0.9, 0.5] {
+            let seq = screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, l1, frac * l1)
+                .unwrap();
+            for workers in [1, 2, 5] {
+                let par = screen_all_parallel(
+                    RuleKind::Paper,
+                    &p.x,
+                    &p.y,
+                    &theta1,
+                    l1,
+                    frac * l1,
+                    workers,
+                )
+                .unwrap();
+                assert_eq!(par.keep, seq.keep, "workers={workers} frac={frac}");
+                // bounds bit-identical (same arithmetic, same order per j)
+                assert_eq!(par.bounds, seq.bounds);
+            }
+        }
+    }
+
+    #[test]
+    fn none_rule_short_circuits() {
+        let p = Problem::from_dataset(&SynthSpec::dense(20, 10, 143).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let rep = screen_all_parallel(
+            RuleKind::None,
+            &p.x,
+            &p.y,
+            &theta1,
+            p.lambda_max(),
+            0.5 * p.lambda_max(),
+            4,
+        )
+        .unwrap();
+        assert_eq!(rep.n_screened(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Thread-pool substrate (std threads; no tokio/rayon offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Applies `f` to every item on `workers` scoped threads, preserving
+/// order. Work is claimed from a shared atomic counter, so uneven item
+/// costs balance automatically (work-stealing-lite).
+pub fn parallel_map<I, T, F>(items: &[I], workers: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let counter = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = counter.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, t) in h.join().expect("worker panicked") {
+                out[i] = Some(t);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("missing item")).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent thread pool for connection handling and background jobs.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawns `workers` threads pulling jobs from a shared queue.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().expect("pool queue poisoned");
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // sender dropped: shut down
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), handles }
+    }
+
+    /// Enqueues a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool workers gone");
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A sensible default worker count for this host.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = parallel_map(&items, 7, |&i| i * 2);
+        assert_eq!(out, items.iter().map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_worker_and_empty() {
+        let out = parallel_map(&[1, 2, 3], 1, |&i| i + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        let empty: Vec<i32> = parallel_map(&[] as &[i32], 4, |&i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_balances_uneven_work() {
+        // Items with wildly different costs still complete.
+        let items: Vec<u64> = (0..64).map(|i| if i % 13 == 0 { 200_000 } else { 10 }).collect();
+        let out = parallel_map(&items, 4, |&spin| {
+            let mut acc = 0u64;
+            for i in 0..spin {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn thread_pool_runs_jobs_and_joins() {
+        let count = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(3);
+            assert_eq!(pool.workers(), 3);
+            for _ in 0..50 {
+                let c = Arc::clone(&count);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins all workers after draining the queue.
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

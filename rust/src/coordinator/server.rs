@@ -1,0 +1,547 @@
+//! The screening service: a TCP line-protocol server exposing the
+//! screening rule behind a batching executor.
+//!
+//! Role in the reproduction: the paper pitches screening as a cheap
+//! pre-pass for model selection; the service shape demonstrates the L3
+//! coordination — concurrent clients exploring different λ share one
+//! dataset-resident process, and the batcher amortizes the O(nnz) stats
+//! sweep across requests that target the same dual point (see
+//! [`crate::screening::rule::screen_multi`]).
+//!
+//! ## Protocol (one JSON object per line, response per line)
+//!
+//! | request | response |
+//! |---|---|
+//! | `{"cmd":"ping"}` | `{"ok":true,"pong":true}` |
+//! | `{"cmd":"info"}` | dataset shape, λ_max, current λ₁ |
+//! | `{"cmd":"solve","lambda":x}` | solves at `x`, updates the dual point |
+//! | `{"cmd":"screen","lambda2":x}` | batched screening vs the current point |
+//! | `{"cmd":"screen","lambda2":x,"indices":true}` | … plus kept indices |
+//! | `{"cmd":"quit"}` | closes the connection |
+//!
+//! Every response carries `"ok"`; errors come back as
+//! `{"ok":false,"error":"..."}`.
+
+use crate::coordinator::batcher::{next_batch, BatchPolicy};
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::protocol::{parse, Json};
+use crate::error::{Error, Result};
+use crate::screening::rule::{screen_multi, RuleKind};
+use crate::solver::api::{solve, SolveOptions, SolverKind};
+use crate::svm::problem::Problem;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
+    pub addr: String,
+    /// Connection-handler threads.
+    pub workers: usize,
+    /// Batching policy for screen requests.
+    pub batch: BatchPolicy,
+    /// Screening rule.
+    pub rule: RuleKind,
+    /// Solver options for `solve` requests.
+    pub solve: SolveOptions,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            batch: BatchPolicy::default(),
+            rule: RuleKind::Paper,
+            solve: SolveOptions::default(),
+        }
+    }
+}
+
+/// The current dual point the server screens against.
+#[derive(Clone)]
+struct DualState {
+    lambda1: f64,
+    theta1: Arc<Vec<f64>>,
+}
+
+struct ScreenJob {
+    lambda2: f64,
+    want_indices: bool,
+    state: DualState,
+    reply: Sender<Json>,
+}
+
+/// Service metrics (monotone counters).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests served, by type.
+    pub screens: AtomicU64,
+    /// Total batches flushed.
+    pub batches: AtomicU64,
+    /// Solve requests served.
+    pub solves: AtomicU64,
+}
+
+struct Shared {
+    problem: Problem,
+    state: Mutex<DualState>,
+    rule: RuleKind,
+    solve_opts: SolveOptions,
+    metrics: Metrics,
+    stop: AtomicBool,
+}
+
+/// A running screening service.
+pub struct ScreeningServer {
+    /// The bound address (resolves port 0).
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    exec_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScreeningServer {
+    /// Starts the service on `cfg.addr` with the given problem.
+    pub fn start(problem: Problem, cfg: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::coordinator(format!("bind {}: {e}", cfg.addr)))?;
+        let addr = listener.local_addr()?;
+
+        let init = DualState {
+            lambda1: problem.lambda_max(),
+            theta1: Arc::new(problem.theta_at_lambda_max().theta()),
+        };
+        let shared = Arc::new(Shared {
+            problem,
+            state: Mutex::new(init),
+            rule: cfg.rule,
+            solve_opts: cfg.solve,
+            metrics: Metrics::default(),
+            stop: AtomicBool::new(false),
+        });
+
+        // Screening executor: drains the job channel in batches.
+        let (job_tx, job_rx) = channel::<ScreenJob>();
+        let exec_shared = Arc::clone(&shared);
+        let policy = cfg.batch;
+        let exec_handle = std::thread::spawn(move || loop {
+            let batch = next_batch(&job_rx, &policy);
+            if batch.is_empty() {
+                break; // channel closed
+            }
+            exec_shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+            run_screen_batch(&exec_shared, batch);
+        });
+
+        // Accept loop on the handler pool.
+        let accept_shared = Arc::clone(&shared);
+        let pool = ThreadPool::new(cfg.workers);
+        let accept_handle = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match stream {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                // One JSON line per request/response: disable Nagle or
+                // every round trip eats a delayed-ACK (~40-90ms observed;
+                // EXPERIMENTS.md §Perf P4).
+                let _ = stream.set_nodelay(true);
+                let shared = Arc::clone(&accept_shared);
+                let tx = job_tx.clone();
+                pool.execute(move || {
+                    let _ = handle_connection(stream, &shared, &tx);
+                });
+            }
+            // pool drops here, joining handlers; job_tx clones die with them
+            drop(job_tx);
+        });
+
+        Ok(ScreeningServer {
+            addr,
+            shared,
+            accept_handle: Some(accept_handle),
+            exec_handle: Some(exec_handle),
+        })
+    }
+
+    /// Metrics snapshot: `(screens, batches, solves)`.
+    pub fn metrics(&self) -> (u64, u64, u64) {
+        (
+            self.shared.metrics.screens.load(Ordering::Relaxed),
+            self.shared.metrics.batches.load(Ordering::Relaxed),
+            self.shared.metrics.solves.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Stops accepting and joins the background threads.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.exec_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_screen_batch(shared: &Shared, batch: Vec<ScreenJob>) {
+    // Group by identical dual point (Arc pointer + lambda1 bits): each
+    // group shares one stats-panel sweep.
+    let mut groups: Vec<(DualState, Vec<ScreenJob>)> = Vec::new();
+    for job in batch {
+        match groups.iter_mut().find(|(st, _)| {
+            Arc::ptr_eq(&st.theta1, &job.state.theta1)
+                && st.lambda1.to_bits() == job.state.lambda1.to_bits()
+        }) {
+            Some((_, jobs)) => jobs.push(job),
+            None => groups.push((job.state.clone(), vec![job])),
+        }
+    }
+    for (state, jobs) in groups {
+        let batch_size = jobs.len();
+        let lambda2s: Vec<f64> = jobs.iter().map(|j| j.lambda2).collect();
+        let result = screen_multi(
+            shared.rule,
+            &shared.problem.x,
+            &shared.problem.y,
+            &state.theta1,
+            state.lambda1,
+            &lambda2s,
+        );
+        match result {
+            Ok(reports) => {
+                for (job, rep) in jobs.into_iter().zip(reports) {
+                    shared.metrics.screens.fetch_add(1, Ordering::Relaxed);
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("kept", Json::Num((rep.keep.len() - rep.n_screened()) as f64)),
+                        ("screened", Json::Num(rep.n_screened() as f64)),
+                        ("rejection", Json::Num(rep.rejection_ratio())),
+                        ("seconds", Json::Num(rep.seconds)),
+                        ("batch_size", Json::Num(batch_size as f64)),
+                        ("lambda1", Json::Num(rep.lambda1)),
+                        ("lambda2", Json::Num(rep.lambda2)),
+                    ];
+                    if job.want_indices {
+                        fields.push((
+                            "indices",
+                            Json::Arr(
+                                rep.kept_indices()
+                                    .into_iter()
+                                    .map(|j| Json::Num(j as f64))
+                                    .collect(),
+                            ),
+                        ));
+                    }
+                    let _ = job.reply.send(Json::obj(fields));
+                }
+            }
+            Err(e) => {
+                for job in jobs {
+                    let _ = job.reply.send(err_json(&e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    shared: &Shared,
+    job_tx: &Sender<ScreenJob>,
+) -> std::io::Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    // Bounded reads so shutdown can interrupt idle connections: the
+    // handler re-checks the stop flag every timeout tick. Without this,
+    // ThreadPool::drop (inside the accept thread) joins a worker that is
+    // blocked forever on a silent client — a shutdown deadlock.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // Persistent accumulator: a timeout can interrupt read_line mid-line
+    // with partial bytes already appended, so the buffer lives across
+    // iterations and is only consumed at a complete newline.
+    let mut acc = String::new();
+    loop {
+        let start_len = acc.len();
+        match reader.read_line(&mut acc) {
+            Ok(0) => break, // EOF
+            Ok(_) if acc.ends_with('\n') => {}
+            Ok(_) => continue, // partial line (EOF race); keep reading
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                let _ = start_len;
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        let line = std::mem::take(&mut acc);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let line = line.trim().to_string();
+        let response = match parse(&line) {
+            Ok(req) => {
+                let cmd = req.get("cmd").and_then(|c| c.as_str()).unwrap_or("");
+                if cmd == "quit" {
+                    break;
+                }
+                dispatch(cmd, &req, shared, job_tx)
+            }
+            Err(e) => err_json(&format!("bad request: {e}")),
+        };
+        writeln!(writer, "{}", response.encode())?;
+    }
+    Ok(())
+}
+
+fn dispatch(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<ScreenJob>) -> Json {
+    match cmd {
+        "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
+        "info" => {
+            let p = &shared.problem;
+            let st = shared.state.lock().unwrap();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("name", Json::Str(p.name.clone())),
+                ("n", Json::Num(p.n() as f64)),
+                ("m", Json::Num(p.m() as f64)),
+                ("lambda_max", Json::Num(p.lambda_max())),
+                ("lambda1", Json::Num(st.lambda1)),
+                ("rule", Json::Str(shared.rule.name().into())),
+            ])
+        }
+        "solve" => {
+            let lambda = match req.get("lambda").and_then(|v| v.as_f64()) {
+                Some(v) if v > 0.0 => v,
+                _ => return err_json("solve requires positive \"lambda\""),
+            };
+            let p = &shared.problem;
+            match solve(SolverKind::Cd, &p.x, &p.y, lambda, None, &shared.solve_opts) {
+                Ok(rep) => {
+                    let theta = crate::svm::dual::theta_from_primal(
+                        &p.x, &p.y, &rep.w, rep.b, lambda,
+                    );
+                    let mut st = shared.state.lock().unwrap();
+                    st.lambda1 = lambda;
+                    st.theta1 = Arc::new(theta);
+                    drop(st);
+                    shared.metrics.solves.fetch_add(1, Ordering::Relaxed);
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("nnz", Json::Num(rep.nnz() as f64)),
+                        ("iterations", Json::Num(rep.iterations as f64)),
+                        ("rel_gap", Json::Num(rep.gap.rel_gap)),
+                        ("seconds", Json::Num(rep.seconds)),
+                        ("converged", Json::Bool(rep.converged)),
+                    ])
+                }
+                Err(e) => err_json(&e.to_string()),
+            }
+        }
+        "screen" => {
+            let lambda2 = match req.get("lambda2").and_then(|v| v.as_f64()) {
+                Some(v) if v > 0.0 => v,
+                _ => return err_json("screen requires positive \"lambda2\""),
+            };
+            let state = shared.state.lock().unwrap().clone();
+            if lambda2 >= state.lambda1 {
+                return err_json(&format!(
+                    "lambda2 {lambda2} must be < current lambda1 {}",
+                    state.lambda1
+                ));
+            }
+            let want_indices = matches!(req.get("indices"), Some(Json::Bool(true)));
+            let (reply_tx, reply_rx) = channel();
+            if job_tx
+                .send(ScreenJob { lambda2, want_indices, state, reply: reply_tx })
+                .is_err()
+            {
+                return err_json("executor unavailable");
+            }
+            reply_rx
+                .recv()
+                .unwrap_or_else(|_| err_json("executor dropped the request"))
+        }
+        other => err_json(&format!("unknown cmd {other:?}")),
+    }
+}
+
+/// Minimal blocking client used by tests, examples and the CLI.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connects to a running service.
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::coordinator(format!("connect: {e}")))?;
+        let _ = stream.set_nodelay(true); // line protocol: no Nagle (Perf P4)
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Sends one request and reads one response.
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.encode())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(Error::coordinator("server closed connection"));
+        }
+        parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn start_test_server() -> ScreeningServer {
+        let p = Problem::from_dataset(&SynthSpec::text(50, 120, 201).generate());
+        ScreeningServer::start(p, ServerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn ping_info_roundtrip() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let pong = c.request(&Json::obj(vec![("cmd", Json::Str("ping".into()))])).unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        assert_eq!(info.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(info.get("m").unwrap().as_f64(), Some(120.0));
+        server.shutdown();
+    }
+
+    #[test]
+    fn screen_request_flows_through_batcher() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.8 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let kept = rep.get("kept").unwrap().as_f64().unwrap();
+        let screened = rep.get("screened").unwrap().as_f64().unwrap();
+        assert_eq!(kept + screened, 120.0);
+        assert!(screened > 0.0, "screening should fire at 0.8 lmax");
+        let (screens, batches, _) = server.metrics();
+        assert_eq!(screens, 1);
+        assert!(batches >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn solve_updates_dual_point_and_indices_work() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        let sol = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("solve".into())),
+                ("lambda", Json::Num(0.6 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(sol.get("ok"), Some(&Json::Bool(true)), "{sol:?}");
+        assert_eq!(sol.get("converged"), Some(&Json::Bool(true)));
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.5 * lmax)),
+                ("indices", Json::Bool(true)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let idx = rep.get("indices").unwrap().as_arr().unwrap();
+        assert_eq!(idx.len() as f64, rep.get("kept").unwrap().as_f64().unwrap());
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_screens_batch_together() {
+        let p = Problem::from_dataset(&SynthSpec::text(60, 400, 203).generate());
+        let mut cfg = ServerConfig::default();
+        cfg.batch = BatchPolicy {
+            max_batch: 8,
+            window: std::time::Duration::from_millis(50),
+        };
+        let server = ScreeningServer::start(p, cfg).unwrap();
+        let addr = server.addr;
+        let lmax = {
+            let mut c = Client::connect(addr).unwrap();
+            let info =
+                c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+            info.get("lambda_max").unwrap().as_f64().unwrap()
+        };
+        let handles: Vec<_> = (0..6)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let rep = c
+                        .request(&Json::obj(vec![
+                            ("cmd", Json::Str("screen".into())),
+                            ("lambda2", Json::Num((0.5 + 0.05 * k as f64) * lmax)),
+                        ]))
+                        .unwrap();
+                    rep.get("batch_size").unwrap().as_f64().unwrap()
+                })
+            })
+            .collect();
+        let sizes: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // At least some requests should have shared a batch.
+        assert!(sizes.iter().any(|&s| s > 1.0), "batch sizes {sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_errors() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c.request(&Json::obj(vec![("cmd", Json::Str("bogus".into()))])).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = c
+            .request(&Json::obj(vec![("cmd", Json::Str("screen".into()))]))
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // lambda2 >= lambda1 rejected
+        let r = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(1e12)),
+            ]))
+            .unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        server.shutdown();
+    }
+}

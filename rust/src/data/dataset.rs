@@ -1,0 +1,126 @@
+//! Dataset container: features ⊕ labels ⊕ metadata.
+
+use super::{FeatureData, FeatureMatrix};
+use crate::error::{Error, Result};
+
+/// A binary-classification dataset in the paper's convention:
+/// `x` is n×m (samples × features), `y ∈ {−1,+1}ⁿ`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Human-readable dataset name (used in reports).
+    pub name: String,
+    /// Feature matrix.
+    pub x: FeatureData,
+    /// Labels, each ±1.
+    pub y: Vec<f64>,
+    /// Indices of the planted informative features, when known
+    /// (synthetic data only; used by recovery diagnostics).
+    pub true_support: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    /// Creates a dataset, validating labels and shapes.
+    pub fn new(name: impl Into<String>, x: FeatureData, y: Vec<f64>) -> Self {
+        let ds = Dataset { name: name.into(), x, y, true_support: None };
+        ds.validate().expect("invalid dataset");
+        ds
+    }
+
+    /// Fallible constructor for untrusted inputs (e.g. file loads).
+    pub fn try_new(name: impl Into<String>, x: FeatureData, y: Vec<f64>) -> Result<Self> {
+        let ds = Dataset { name: name.into(), x, y, true_support: None };
+        ds.validate()?;
+        Ok(ds)
+    }
+
+    /// Attaches the planted support (builder style).
+    pub fn with_true_support(mut self, support: Vec<usize>) -> Self {
+        self.true_support = Some(support);
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.y.len() != self.x.n_samples() {
+            return Err(Error::data(format!(
+                "labels ({}) != samples ({})",
+                self.y.len(),
+                self.x.n_samples()
+            )));
+        }
+        if self.y.iter().any(|&v| v != 1.0 && v != -1.0) {
+            return Err(Error::data("labels must be ±1"));
+        }
+        if self.y.is_empty() {
+            return Err(Error::data("empty dataset"));
+        }
+        Ok(())
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.x.n_samples()
+    }
+
+    /// Number of features.
+    pub fn m(&self) -> usize {
+        self.x.n_features()
+    }
+
+    /// Count of positive labels.
+    pub fn n_pos(&self) -> usize {
+        self.y.iter().filter(|v| **v > 0.0).count()
+    }
+
+    /// Count of negative labels.
+    pub fn n_neg(&self) -> usize {
+        self.y.len() - self.n_pos()
+    }
+
+    /// One-line description for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: n={} m={} nnz={} density={:.4} (+{} / -{})",
+            self.name,
+            self.n(),
+            self.m(),
+            self.x.nnz(),
+            self.x.density(),
+            self.n_pos(),
+            self.n_neg()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    fn xy() -> (FeatureData, Vec<f64>) {
+        let x = DenseMatrix::from_cols(3, vec![vec![1.0, 2.0, 3.0]]);
+        (FeatureData::Dense(x), vec![1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn construction_and_counts() {
+        let (x, y) = xy();
+        let ds = Dataset::new("toy", x, y);
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.m(), 1);
+        assert_eq!(ds.n_pos(), 2);
+        assert_eq!(ds.n_neg(), 1);
+        assert!(ds.describe().contains("toy"));
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let (x, _) = xy();
+        assert!(Dataset::try_new("bad", x, vec![1.0, 0.5, -1.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let (x, _) = xy();
+        assert!(Dataset::try_new("bad", x, vec![1.0, -1.0]).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! libsvm / svmlight format reader and writer.
+//!
+//! Format: one sample per line, `label idx:val idx:val ...` with 1-based,
+//! strictly increasing feature indices. Labels are mapped to ±1 (`+1`,
+//! `1`, and anything > 0 → +1; everything else → −1 must be exactly
+//! parseable as a number).
+
+use super::csc::CscMatrix;
+use super::dataset::Dataset;
+use super::FeatureData;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Parses libsvm text into a sparse [`Dataset`].
+///
+/// `min_features` lets callers force a dimensionality larger than the
+/// max index present (0 = infer from data).
+pub fn parse_reader<R: BufRead>(name: &str, reader: R, min_features: usize) -> Result<Dataset> {
+    let mut y = Vec::new();
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut max_feature = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or_else(|| Error::data("empty line"))?;
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| Error::data(format!("line {}: bad label {label_tok:?}", lineno + 1)))?;
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+
+        let mut entries = Vec::new();
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .ok_or_else(|| Error::data(format!("line {}: bad pair {tok:?}", lineno + 1)))?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: bad index {idx_s:?}", lineno + 1)))?;
+            let val: f64 = val_s
+                .parse()
+                .map_err(|_| Error::data(format!("line {}: bad value {val_s:?}", lineno + 1)))?;
+            if idx == 0 {
+                return Err(Error::data(format!("line {}: indices are 1-based", lineno + 1)));
+            }
+            if idx <= prev_idx {
+                return Err(Error::data(format!(
+                    "line {}: indices must be strictly increasing",
+                    lineno + 1
+                )));
+            }
+            prev_idx = idx;
+            max_feature = max_feature.max(idx);
+            if val != 0.0 {
+                entries.push((idx as u32 - 1, val));
+            }
+        }
+        rows.push(entries);
+    }
+
+    let n = y.len();
+    let m = max_feature.max(min_features);
+    if n == 0 {
+        return Err(Error::data("no samples in input"));
+    }
+    // Transpose row-wise triplets into column-wise.
+    let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); m];
+    for (i, row) in rows.into_iter().enumerate() {
+        for (j, v) in row {
+            cols[j as usize].push((i as u32, v));
+        }
+    }
+    let x = CscMatrix::from_triplet_cols(n, cols);
+    Dataset::try_new(name, FeatureData::Sparse(x), y)
+}
+
+/// Loads a libsvm file from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    let file = std::fs::File::open(path)?;
+    parse_reader(&name, BufReader::new(file), 0)
+}
+
+/// Writes a dataset in libsvm format.
+pub fn save(ds: &Dataset, mut w: impl Write) -> Result<()> {
+    use super::FeatureMatrix;
+    let n = ds.n();
+    let m = ds.m();
+    // Gather row-wise views: walk every column once, bucket by row.
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    let mut buf = vec![0.0; n];
+    for j in 0..m {
+        ds.x.densify_col(j, &mut buf);
+        for (i, &v) in buf.iter().enumerate() {
+            if v != 0.0 {
+                rows[i].push((j + 1, v));
+            }
+        }
+    }
+    for (i, row) in rows.iter().enumerate() {
+        let label = if ds.y[i] > 0.0 { "+1" } else { "-1" };
+        write!(w, "{label}")?;
+        for (j, v) in row {
+            write!(w, " {j}:{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::FeatureMatrix;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.25
+-1 2:2.0
++1 1:1.0 2:-1.0 3:0.5  # trailing comment
+";
+
+    #[test]
+    fn parse_basic() {
+        let ds = parse_reader("t", SAMPLE.as_bytes(), 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.m(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.col_nnz(0), 2);
+        assert_eq!(ds.x.col_dot(2, &[1.0, 1.0, 1.0]), 1.75);
+    }
+
+    #[test]
+    fn parse_min_features_pads() {
+        let ds = parse_reader("t", SAMPLE.as_bytes(), 10).unwrap();
+        assert_eq!(ds.m(), 10);
+        assert_eq!(ds.x.col_nnz(9), 0);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(parse_reader("t", "+1 0:1.0".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unsorted() {
+        assert!(parse_reader("t", "+1 3:1.0 2:1.0".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_reader("t", "abc 1:1.0".as_bytes(), 0).is_err());
+        assert!(parse_reader("t", "+1 1:xyz".as_bytes(), 0).is_err());
+        assert!(parse_reader("t", "+1 1-2".as_bytes(), 0).is_err());
+        assert!(parse_reader("t", "".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = parse_reader("t", SAMPLE.as_bytes(), 0).unwrap();
+        let mut out = Vec::new();
+        save(&ds, &mut out).unwrap();
+        let ds2 = parse_reader("t2", out.as_slice(), 0).unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x.nnz(), ds2.x.nnz());
+        for j in 0..ds.m() {
+            let v = vec![1.0; ds.n()];
+            assert!((ds.x.col_dot(j, &v) - ds2.x.col_dot(j, &v)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let ds = crate::data::synth::SynthSpec::text(30, 100, 3).generate();
+        let mut out = Vec::new();
+        save(&ds, &mut out).unwrap();
+        let ds2 = parse_reader("re", out.as_slice(), ds.m()).unwrap();
+        assert_eq!(ds2.n(), ds.n());
+        assert_eq!(ds2.m(), ds.m());
+        assert_eq!(ds2.y, ds.y);
+        assert_eq!(ds2.x.nnz(), ds.x.nnz());
+    }
+}

@@ -1,0 +1,211 @@
+//! Data substrate: feature matrices (dense + CSC sparse), dataset
+//! container, libsvm-format I/O and deterministic synthetic generators.
+//!
+//! Throughout the crate the data matrix follows the paper's convention:
+//! `X` holds `n` samples with `m` features; features are *columns*
+//! (`f_j ∈ ℝⁿ`). Screening and coordinate descent are feature-column
+//! algorithms, so both backends are optimized for fast column access:
+//! [`dense::DenseMatrix`] stores column-major, [`csc::CscMatrix`] is
+//! compressed-sparse-column.
+
+pub mod csc;
+pub mod dataset;
+pub mod dense;
+pub mod libsvm;
+pub mod synth;
+
+/// Column-oriented access to a feature matrix (n samples × m features).
+///
+/// All screening/solver code is generic over this trait, so dense and
+/// sparse datasets share one implementation of the paper's algorithms.
+pub trait FeatureMatrix {
+    /// Number of samples (rows), `n` in the paper.
+    fn n_samples(&self) -> usize;
+    /// Number of features (columns), `m` in the paper.
+    fn n_features(&self) -> usize;
+    /// **Stored** entries in feature column `j` — O(1) for both
+    /// backends: the CSC column length, or `n` for dense storage (which
+    /// stores every cell, zeros included). Used as the work estimate by
+    /// the block partitioner; exact zero-counting would itself cost a
+    /// full data pass (Perf §P5).
+    fn col_nnz(&self, j: usize) -> usize;
+
+    /// Dot product of feature column `j` with a dense vector `v` (len n).
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64;
+
+    /// The per-feature statistics panel in one pass:
+    /// `(f_jᵀ y, f_jᵀ 1, f_jᵀ theta, ‖f_j‖²)`.
+    ///
+    /// This is the native analogue of the Pallas panel matmul and the
+    /// single O(nnz) operation the screening bound needs per feature.
+    fn col_dot4(&self, j: usize, y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64);
+
+    /// `out += alpha * f_j` (dense accumulator, len n).
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]);
+
+    /// Visits the stored entries of column `j` as `(row, value)` pairs.
+    ///
+    /// Dense backends visit every row; sparse backends only non-zeros.
+    fn col_visit(&self, j: usize, f: &mut dyn FnMut(usize, f64));
+
+    /// Fused coordinate-descent gradient for the squared hinge:
+    /// `g_j = −Σ_{i ∈ supp(f_j)} x_ij · y_i · max(0, 1 − y_i(z_i + b))`.
+    ///
+    /// This is THE inner loop of the CD solver; the default goes through
+    /// the dynamic [`FeatureMatrix::col_visit`], but both backends
+    /// override it with direct loops (25% of solve time was dyn-dispatch
+    /// overhead — EXPERIMENTS.md §Perf P1).
+    fn col_sqhinge_grad(&self, j: usize, y: &[f64], z: &[f64], b: f64) -> f64 {
+        let mut g = 0.0;
+        self.col_visit(j, &mut |i, v| {
+            let xi = (1.0 - y[i] * (z[i] + b)).max(0.0);
+            g -= v * y[i] * xi;
+        });
+        g
+    }
+
+    /// Squared norm of column `j`.
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        let mut buf = vec![0.0; self.n_samples()];
+        self.col_axpy(j, 1.0, &mut buf);
+        crate::linalg::nrm2_sq(&buf)
+    }
+
+    /// Densifies column `j` into `buf` (len n, zeroed by the callee).
+    fn densify_col(&self, j: usize, buf: &mut [f64]) {
+        buf.iter_mut().for_each(|v| *v = 0.0);
+        self.col_axpy(j, 1.0, buf);
+    }
+
+    /// Computes scores `out = X w` for dense `w` (len m), `out` len n.
+    ///
+    /// Skips exact-zero weights, so cost is O(Σ_{j: w_j≠0} nnz_j) — this
+    /// is the warm-start-friendly form the path runner relies on.
+    fn matvec(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.n_features());
+        assert_eq!(out.len(), self.n_samples());
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for (j, &wj) in w.iter().enumerate() {
+            if wj != 0.0 {
+                self.col_axpy(j, wj, out);
+            }
+        }
+    }
+
+    /// Computes `out = Xᵀ v`, i.e. `out[j] = f_jᵀ v`, for all features.
+    fn matvec_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n_samples());
+        assert_eq!(out.len(), self.n_features());
+        for j in 0..self.n_features() {
+            out[j] = self.col_dot(j, v);
+        }
+    }
+
+    /// Total non-zeros (for reporting / cost models).
+    fn nnz(&self) -> usize {
+        (0..self.n_features()).map(|j| self.col_nnz(j)).sum()
+    }
+
+    /// Density in [0, 1].
+    fn density(&self) -> f64 {
+        let cells = self.n_samples() * self.n_features();
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+}
+
+/// Owning dense-or-sparse feature storage with static dispatch.
+#[derive(Debug, Clone)]
+pub enum FeatureData {
+    /// Column-major dense storage.
+    Dense(dense::DenseMatrix),
+    /// Compressed-sparse-column storage.
+    Sparse(csc::CscMatrix),
+}
+
+macro_rules! dispatch {
+    ($self:ident, $m:ident ( $($arg:expr),* )) => {
+        match $self {
+            FeatureData::Dense(x) => x.$m($($arg),*),
+            FeatureData::Sparse(x) => x.$m($($arg),*),
+        }
+    };
+}
+
+impl FeatureMatrix for FeatureData {
+    fn n_samples(&self) -> usize {
+        dispatch!(self, n_samples())
+    }
+    fn n_features(&self) -> usize {
+        dispatch!(self, n_features())
+    }
+    fn col_nnz(&self, j: usize) -> usize {
+        dispatch!(self, col_nnz(j))
+    }
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        dispatch!(self, col_dot(j, v))
+    }
+    fn col_dot4(&self, j: usize, y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64) {
+        dispatch!(self, col_dot4(j, y, theta))
+    }
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        dispatch!(self, col_axpy(j, alpha, out))
+    }
+    fn col_visit(&self, j: usize, f: &mut dyn FnMut(usize, f64)) {
+        dispatch!(self, col_visit(j, f))
+    }
+    fn col_sqhinge_grad(&self, j: usize, y: &[f64], z: &[f64], b: f64) -> f64 {
+        dispatch!(self, col_sqhinge_grad(j, y, z, b))
+    }
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        dispatch!(self, col_norm_sq(j))
+    }
+    fn nnz(&self) -> usize {
+        dispatch!(self, nnz())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dense() -> dense::DenseMatrix {
+        // 3 samples x 2 features: f0 = [1,2,3], f1 = [0,-1,1]
+        dense::DenseMatrix::from_cols(3, vec![vec![1.0, 2.0, 3.0], vec![0.0, -1.0, 1.0]])
+    }
+
+    #[test]
+    fn trait_default_matvec() {
+        let x = FeatureData::Dense(toy_dense());
+        let mut out = vec![0.0; 3];
+        x.matvec(&[2.0, 1.0], &mut out);
+        assert_eq!(out, vec![2.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn trait_default_matvec_t() {
+        let x = FeatureData::Dense(toy_dense());
+        let mut out = vec![0.0; 2];
+        x.matvec_t(&[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, vec![6.0, 0.0]);
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        // nnz counts STORED entries: dense storage stores all cells.
+        let x = FeatureData::Dense(toy_dense());
+        assert_eq!(x.nnz(), 6);
+        assert!((x.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn densify_col_roundtrip() {
+        let x = toy_dense();
+        let mut buf = vec![9.0; 3];
+        x.densify_col(1, &mut buf);
+        assert_eq!(buf, vec![0.0, -1.0, 1.0]);
+    }
+}

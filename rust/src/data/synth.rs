@@ -1,0 +1,550 @@
+//! Deterministic synthetic dataset generators + the PCG random substrate.
+//!
+//! The image is offline, so the evaluation runs on synthetic replicas of
+//! the dataset regimes safe-screening papers evaluate on (DESIGN.md §4):
+//!
+//! * [`SynthSpec::dense`] — Gaussian features with a planted sparse
+//!   hyperplane (UCI-dense regime, e.g. *magic04*-like).
+//! * [`SynthSpec::text`] — Zipf-distributed sparse bag-of-words with a
+//!   sparse topic model (rcv1/news20 regime).
+//! * [`SynthSpec::corr`] — groups of strongly correlated features
+//!   (microarray regime), the stress case for screening because
+//!   near-duplicate features have near-identical bounds.
+//!
+//! All generators are deterministic functions of their seed.
+
+use super::csc::CscMatrix;
+use super::dataset::Dataset;
+use super::dense::DenseMatrix;
+use super::{FeatureData, FeatureMatrix};
+
+/// PCG-XSH-RR 64/32 pseudo-random generator (O'Neill 2014).
+///
+/// Small, fast, reproducible across platforms; the crate's only source of
+/// randomness (the vendored crate set has no `rand`).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6364136223846793005;
+
+    /// Creates a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with stream 54 (arbitrary fixed odd inc).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    /// Next 32 uniform random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniform random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.f64() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Samples `k` distinct indices from `[0, n)`.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm.
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in n - k..n {
+            let t = self.below(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+}
+
+/// Zipf sampler over `[0, n)` with exponent `s`, via precomputed CDF and
+/// binary search. Deterministic given the RNG.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Builds the sampler (O(n) setup).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draws one rank in `[0, n)` (0 = most frequent).
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Which generator family to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// Dense Gaussian features, planted sparse hyperplane.
+    Dense,
+    /// Sparse Zipf bag-of-words, sparse topic weights.
+    Text,
+    /// Correlated feature groups (dense), planted group-sparse weights.
+    Corr,
+}
+
+impl SynthKind {
+    /// Parses `"dense" | "text" | "corr"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "dense" => Some(SynthKind::Dense),
+            "text" => Some(SynthKind::Text),
+            "corr" => Some(SynthKind::Corr),
+            _ => None,
+        }
+    }
+}
+
+/// Full specification of a synthetic dataset; `generate()` is a pure
+/// function of this struct.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    /// Generator family.
+    pub kind: SynthKind,
+    /// Number of samples.
+    pub n: usize,
+    /// Number of features.
+    pub m: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Number of truly informative features.
+    pub k_informative: usize,
+    /// Label noise: probability of flipping a label.
+    pub flip_prob: f64,
+    /// Text: mean tokens per document.
+    pub doc_len: usize,
+    /// Text: Zipf exponent.
+    pub zipf_s: f64,
+    /// Corr: features per correlated group.
+    pub group_size: usize,
+    /// Corr: within-group correlation strength in [0,1).
+    pub group_rho: f64,
+    /// Normalize feature columns to unit L2 norm (standard for screening).
+    pub normalize: bool,
+}
+
+impl SynthSpec {
+    /// Dense Gaussian spec with sensible defaults.
+    pub fn dense(n: usize, m: usize, seed: u64) -> Self {
+        SynthSpec {
+            kind: SynthKind::Dense,
+            n,
+            m,
+            seed,
+            k_informative: (m / 20).clamp(2, 50),
+            flip_prob: 0.05,
+            doc_len: 0,
+            zipf_s: 0.0,
+            group_size: 0,
+            group_rho: 0.0,
+            normalize: true,
+        }
+    }
+
+    /// Sparse text-like spec with sensible defaults.
+    pub fn text(n: usize, m: usize, seed: u64) -> Self {
+        SynthSpec {
+            kind: SynthKind::Text,
+            n,
+            m,
+            seed,
+            k_informative: (m / 50).clamp(5, 200),
+            flip_prob: 0.03,
+            doc_len: 60,
+            zipf_s: 1.05,
+            group_size: 0,
+            group_rho: 0.0,
+            normalize: true,
+        }
+    }
+
+    /// Correlated-groups spec with sensible defaults.
+    pub fn corr(n: usize, m: usize, seed: u64) -> Self {
+        SynthSpec {
+            kind: SynthKind::Corr,
+            n,
+            m,
+            seed,
+            k_informative: (m / 25).clamp(2, 40),
+            flip_prob: 0.05,
+            doc_len: 0,
+            zipf_s: 0.0,
+            group_size: 10,
+            group_rho: 0.9,
+            normalize: true,
+        }
+    }
+
+    /// Canonical name used in reports: e.g. `synth-text-n2000-m20000`.
+    pub fn name(&self) -> String {
+        let kind = match self.kind {
+            SynthKind::Dense => "dense",
+            SynthKind::Text => "text",
+            SynthKind::Corr => "corr",
+        };
+        format!("synth-{kind}-n{}-m{}", self.n, self.m)
+    }
+
+    /// Generates the dataset.
+    pub fn generate(&self) -> Dataset {
+        match self.kind {
+            SynthKind::Dense => gen_dense(self),
+            SynthKind::Text => gen_text(self),
+            SynthKind::Corr => gen_corr(self),
+        }
+    }
+}
+
+/// Labels from a planted sparse linear model + bias, with flip noise.
+/// Ensures both classes are non-empty by construction (flips one sample
+/// if the draw came out single-class).
+fn assign_labels(
+    rng: &mut Pcg32,
+    scores: &[f64],
+    flip_prob: f64,
+) -> Vec<f64> {
+    let n = scores.len();
+    let mut y: Vec<f64> = scores
+        .iter()
+        .map(|s| if *s >= 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    for yi in y.iter_mut() {
+        if rng.f64() < flip_prob {
+            *yi = -*yi;
+        }
+    }
+    let pos = y.iter().filter(|v| **v > 0.0).count();
+    if pos == 0 {
+        y[0] = 1.0;
+    } else if pos == n {
+        y[0] = -1.0;
+    }
+    y
+}
+
+fn planted_weights(rng: &mut Pcg32, m: usize, k: usize) -> Vec<(usize, f64)> {
+    let idx = rng.sample_distinct(m, k.min(m));
+    idx.into_iter()
+        .map(|j| {
+            let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+            (j, sign * (0.5 + rng.f64()))
+        })
+        .collect()
+}
+
+fn gen_dense(spec: &SynthSpec) -> Dataset {
+    let mut rng = Pcg32::seeded(spec.seed);
+    let mut x = DenseMatrix::zeros(spec.n, spec.m);
+    for j in 0..spec.m {
+        let col = x.col_mut(j);
+        for v in col.iter_mut() {
+            *v = rng.gaussian();
+        }
+    }
+    let w_true = planted_weights(&mut rng, spec.m, spec.k_informative);
+    let mut scores = vec![0.0; spec.n];
+    for &(j, wj) in &w_true {
+        x.col_axpy(j, wj, &mut scores);
+    }
+    let bias = 0.3 * rng.gaussian();
+    for s in scores.iter_mut() {
+        *s += bias + 0.1 * rng.gaussian();
+    }
+    let y = assign_labels(&mut rng, &scores, spec.flip_prob);
+    if spec.normalize {
+        x.normalize_cols();
+    }
+    Dataset::new(spec.name(), FeatureData::Dense(x), y)
+        .with_true_support(w_true.iter().map(|e| e.0).collect())
+}
+
+fn gen_text(spec: &SynthSpec) -> Dataset {
+    let mut rng = Pcg32::seeded(spec.seed);
+    let zipf = Zipf::new(spec.m, spec.zipf_s);
+    // Random permutation so informative features aren't all high-frequency.
+    let mut perm: Vec<usize> = (0..spec.m).collect();
+    rng.shuffle(&mut perm);
+
+    let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); spec.m];
+    for i in 0..spec.n {
+        // Document length ~ doc_len ± 50%.
+        let len = (spec.doc_len as f64 * (0.5 + rng.f64())).max(1.0) as usize;
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..len {
+            let rank = zipf.sample(&mut rng);
+            *counts.entry(perm[rank]).or_insert(0.0) += 1.0;
+        }
+        for (j, c) in counts {
+            // log-scaled term frequency, the usual tf transform
+            cols[j].push((i as u32, 1.0 + (c as f64).ln()));
+        }
+    }
+    let mut x = CscMatrix::from_triplet_cols(spec.n, cols);
+
+    // Informative features drawn from the *frequent* half so they appear
+    // in enough documents to matter.
+    let mut w_true = Vec::new();
+    {
+        let mut candidates: Vec<usize> = (0..spec.m)
+            .filter(|&j| x.col_nnz(j) >= spec.n / 50)
+            .collect();
+        if candidates.is_empty() {
+            candidates = (0..spec.m).collect();
+        }
+        rng.shuffle(&mut candidates);
+        for &j in candidates.iter().take(spec.k_informative) {
+            let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+            w_true.push((j, sign * (0.5 + rng.f64())));
+        }
+    }
+    let mut scores = vec![0.0; spec.n];
+    for &(j, wj) in &w_true {
+        x.col_axpy(j, wj, &mut scores);
+    }
+    // Center scores so classes are roughly balanced.
+    let mean = crate::linalg::sum(&scores) / spec.n as f64;
+    for s in scores.iter_mut() {
+        *s -= mean;
+    }
+    let y = assign_labels(&mut rng, &scores, spec.flip_prob);
+    if spec.normalize {
+        x.normalize_cols();
+    }
+    Dataset::new(spec.name(), FeatureData::Sparse(x), y)
+        .with_true_support(w_true.iter().map(|e| e.0).collect())
+}
+
+fn gen_corr(spec: &SynthSpec) -> Dataset {
+    let mut rng = Pcg32::seeded(spec.seed);
+    let gsize = spec.group_size.max(1);
+    let n_groups = spec.m.div_ceil(gsize);
+    let mut x = DenseMatrix::zeros(spec.n, spec.m);
+    // Shared factor per group + idiosyncratic noise:
+    // f = sqrt(rho) * g + sqrt(1-rho) * e
+    let rho = spec.group_rho.clamp(0.0, 0.999);
+    let (a, b) = (rho.sqrt(), (1.0 - rho).sqrt());
+    let mut factor = vec![0.0; spec.n];
+    for g in 0..n_groups {
+        for v in factor.iter_mut() {
+            *v = rng.gaussian();
+        }
+        for j in g * gsize..((g + 1) * gsize).min(spec.m) {
+            let col = x.col_mut(j);
+            for (i, v) in col.iter_mut().enumerate() {
+                *v = a * factor[i] + b * rng.gaussian();
+            }
+        }
+    }
+    let w_true = planted_weights(&mut rng, spec.m, spec.k_informative);
+    let mut scores = vec![0.0; spec.n];
+    for &(j, wj) in &w_true {
+        x.col_axpy(j, wj, &mut scores);
+    }
+    let y = assign_labels(&mut rng, &scores, spec.flip_prob);
+    if spec.normalize {
+        x.normalize_cols();
+    }
+    Dataset::new(spec.name(), FeatureData::Dense(x), y)
+        .with_true_support(w_true.iter().map(|e| e.0).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_reference_stream_is_deterministic() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::seeded(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg32::seeded(1);
+        let mut mean = 0.0;
+        for _ in 0..10_000 {
+            let u = rng.f64();
+            assert!((0.0..1.0).contains(&u));
+            mean += u;
+        }
+        mean /= 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "uniform mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.gaussian();
+            s1 += g;
+            s2 += g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "gaussian mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "gaussian var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Pcg32::seeded(3);
+        let s = rng.sample_distinct(100, 30);
+        assert_eq!(s.len(), 30);
+        let set: std::collections::BTreeSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 30);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg32::seeded(4);
+        let z = Zipf::new(1000, 1.1);
+        let mut low = 0;
+        for _ in 0..5000 {
+            let k = z.sample(&mut rng);
+            assert!(k < 1000);
+            if k < 50 {
+                low += 1;
+            }
+        }
+        // top-5% ranks should absorb a large share of the mass
+        assert!(low > 1500, "zipf not skewed: {low}");
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        for spec in [
+            SynthSpec::dense(40, 30, 9),
+            SynthSpec::text(40, 60, 9),
+            SynthSpec::corr(40, 30, 9),
+        ] {
+            let d1 = spec.generate();
+            let d2 = spec.generate();
+            assert_eq!(d1.y, d2.y, "{}", spec.name());
+            assert_eq!(d1.x.nnz(), d2.x.nnz());
+        }
+    }
+
+    #[test]
+    fn generated_shapes_and_labels() {
+        let ds = SynthSpec::text(50, 200, 11).generate();
+        assert_eq!(ds.x.n_samples(), 50);
+        assert_eq!(ds.x.n_features(), 200);
+        assert_eq!(ds.y.len(), 50);
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(ds.n_pos() > 0 && ds.n_neg() > 0);
+    }
+
+    #[test]
+    fn normalization_applied() {
+        let ds = SynthSpec::dense(30, 10, 5).generate();
+        for j in 0..10 {
+            let nsq = ds.x.col_norm_sq(j);
+            assert!((nsq - 1.0).abs() < 1e-9, "col {j} norm² {nsq}");
+        }
+    }
+
+    #[test]
+    fn text_is_sparse() {
+        let ds = SynthSpec::text(100, 2000, 6).generate();
+        assert!(ds.x.density() < 0.05, "density {}", ds.x.density());
+    }
+
+    #[test]
+    fn corr_groups_are_correlated() {
+        let spec = SynthSpec::corr(500, 20, 13);
+        let ds = spec.generate();
+        // Features 0 and 1 share a group factor with rho=0.9.
+        let mut f0 = vec![0.0; 500];
+        let mut f1 = vec![0.0; 500];
+        ds.x.densify_col(0, &mut f0);
+        ds.x.densify_col(1, &mut f1);
+        let corr = crate::linalg::dot(&f0, &f1)
+            / (crate::linalg::nrm2(&f0) * crate::linalg::nrm2(&f1));
+        assert!(corr > 0.7, "in-group correlation {corr}");
+        // Feature 0 and one from another group: weak.
+        let mut g = vec![0.0; 500];
+        ds.x.densify_col(15, &mut g);
+        let cross =
+            crate::linalg::dot(&f0, &g) / (crate::linalg::nrm2(&f0) * crate::linalg::nrm2(&g));
+        assert!(cross.abs() < 0.3, "cross-group correlation {cross}");
+    }
+}

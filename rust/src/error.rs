@@ -1,0 +1,89 @@
+//! Error taxonomy for the svmscreen crate.
+//!
+//! Every fallible public API returns [`Result`]. The variants partition
+//! failures by subsystem so callers (CLI, server, benches) can react
+//! differently to, e.g., a malformed request vs a missing artifact.
+
+use thiserror::Error;
+
+/// Crate-wide error type.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Input data is malformed (parsing, dimension mismatch, bad labels).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// A configuration value is missing or invalid.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Solver failed to make progress or diverged.
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// Screening-rule precondition violated (e.g. lambda2 >= lambda1).
+    #[error("screening error: {0}")]
+    Screening(String),
+
+    /// PJRT / XLA runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / service failure (pool, protocol, socket).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Construct a [`Error::Data`] from anything displayable.
+    pub fn data(msg: impl std::fmt::Display) -> Self {
+        Error::Data(msg.to_string())
+    }
+    /// Construct a [`Error::Config`] from anything displayable.
+    pub fn config(msg: impl std::fmt::Display) -> Self {
+        Error::Config(msg.to_string())
+    }
+    /// Construct a [`Error::Solver`] from anything displayable.
+    pub fn solver(msg: impl std::fmt::Display) -> Self {
+        Error::Solver(msg.to_string())
+    }
+    /// Construct a [`Error::Screening`] from anything displayable.
+    pub fn screening(msg: impl std::fmt::Display) -> Self {
+        Error::Screening(msg.to_string())
+    }
+    /// Construct a [`Error::Runtime`] from anything displayable.
+    pub fn runtime(msg: impl std::fmt::Display) -> Self {
+        Error::Runtime(msg.to_string())
+    }
+    /// Construct a [`Error::Coordinator`] from anything displayable.
+    pub fn coordinator(msg: impl std::fmt::Display) -> Self {
+        Error::Coordinator(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_subsystem() {
+        let e = Error::data("bad row 7");
+        assert_eq!(e.to_string(), "data error: bad row 7");
+        let e = Error::runtime("no artifact");
+        assert!(e.to_string().starts_with("runtime error:"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,65 @@
+//! # svmscreen — Safe and Efficient Screening for Sparse SVM
+//!
+//! A production-grade reproduction of *"Safe and Efficient Screening for
+//! Sparse Support Vector Machine"* (Zhao & Liu, KDD 2014) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: regularization-path runner with
+//!   sequential safe screening, warm-started solvers, a block-parallel
+//!   screening executor, and a batched screening service.
+//! * **L2 (python/compile/model.py, build-time only)** — JAX graphs for the
+//!   screening pass and the SVM objective/gradient, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time only)** — the Pallas kernel
+//!   computing the per-feature screening bound as an MXU panel matmul.
+//!
+//! The rust binary is self-contained after `make artifacts`: it loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) and never calls
+//! Python on the hot path. All screening math is *also* implemented
+//! natively in rust ([`screening`]) so the system runs without artifacts
+//! and so the PJRT path can be cross-validated against a second
+//! implementation.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use svmscreen::prelude::*;
+//!
+//! // A synthetic text-like classification dataset.
+//! let ds = svmscreen::data::synth::SynthSpec::text(2000, 5000, 42).generate();
+//! let problem = Problem::from_dataset(&ds);
+//!
+//! // Train a 20-point regularization path with safe screening.
+//! let grid = svmscreen::path::grid::geometric(problem.lambda_max(), 0.05, 20);
+//! let cfg = svmscreen::path::runner::PathConfig::default();
+//! let report = svmscreen::path::runner::run_path(&problem, &grid, &cfg).unwrap();
+//! println!("{}", report.summary_table());
+//! ```
+#![allow(clippy::needless_range_loop)]
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod linalg;
+pub mod path;
+pub mod report;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod svm;
+pub mod testkit;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::data::dataset::Dataset;
+    pub use crate::data::{csc::CscMatrix, dense::DenseMatrix, FeatureMatrix};
+    pub use crate::error::{Error, Result};
+    pub use crate::path::runner::{run_path, PathConfig, PathReport};
+    pub use crate::screening::rule::{RuleKind, ScreeningRule};
+    pub use crate::solver::api::{SolveReport, Solver, SolverKind};
+    pub use crate::svm::problem::Problem;
+}
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,33 @@
+//! Dense linear-algebra primitives used throughout the crate.
+//!
+//! Everything here operates on `&[f64]` slices; there is deliberately no
+//! heavyweight tensor type — the hot paths (screening bound, coordinate
+//! descent) want raw slices and manual unrolling. The projection operators
+//! implement Eq. (39) of the paper:
+//!
+//! ```text
+//! P_u(v) = v - (vᵀu / ‖u‖²) u
+//! ```
+//!
+//! which appears (singly and doubly nested) in all three closed-form cases
+//! of the screening bound.
+
+pub mod project;
+pub mod vector;
+
+pub use project::{proj_null, proj_null_dot, proj_null_norm_sq, ProjCache};
+pub use vector::{
+    add_scaled, axpy, dot, dot4, nrm2, nrm2_sq, scale, sub, sum,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexports_work() {
+        let v = [3.0, 4.0];
+        assert!((nrm2(&v) - 5.0).abs() < 1e-12);
+        assert!((dot(&v, &v) - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Null-space projection operators — Eq. (39) of the paper.
+//!
+//! `P_u(v) = v − (vᵀu/‖u‖²) u` projects `v` onto the orthogonal
+//! complement of `u`. The screening bound needs `‖P_y(f̂)‖`,
+//! `P_y(b)ᵀP_y(f̂)` and (in the β>0, α>0 case) the doubly-nested
+//! `P_{P_a(y)}(P_a(·))` terms. Materializing the projected vectors is
+//! O(n) *memory traffic* per feature, so the hot path instead uses the
+//! scalar identities
+//!
+//! ```text
+//! ‖P_u(v)‖²      = ‖v‖² − (vᵀu)²/‖u‖²
+//! P_u(v)ᵀP_u(w)  = vᵀw − (vᵀu)(wᵀu)/‖u‖²
+//! ```
+//!
+//! provided here as [`proj_null_norm_sq`] / [`proj_null_dot`], and a
+//! [`ProjCache`] that precomputes `‖u‖²` once per shared vector.
+
+use super::vector::{dot, nrm2_sq};
+
+/// Materializes `P_u(v)` as a new vector. O(n); used in tests and in the
+/// one-time shared precompute, never in the per-feature loop.
+pub fn proj_null(u: &[f64], v: &[f64]) -> Vec<f64> {
+    let uu = nrm2_sq(u);
+    if uu == 0.0 {
+        // Projecting onto the complement of the zero vector is the identity.
+        return v.to_vec();
+    }
+    let c = dot(v, u) / uu;
+    v.iter().zip(u).map(|(vi, ui)| vi - c * ui).collect()
+}
+
+/// `‖P_u(v)‖²` without materializing the projection.
+///
+/// Clamped at zero: the analytic value `‖v‖² − (vᵀu)²/‖u‖²` can go
+/// slightly negative in floating point when `v` is (nearly) parallel
+/// to `u`.
+#[inline]
+pub fn proj_null_norm_sq(v_sq: f64, v_dot_u: f64, u_sq: f64) -> f64 {
+    if u_sq == 0.0 {
+        return v_sq;
+    }
+    (v_sq - v_dot_u * v_dot_u / u_sq).max(0.0)
+}
+
+/// `P_u(v)ᵀ P_u(w)` from precomputed dots, without materializing.
+#[inline]
+pub fn proj_null_dot(v_dot_w: f64, v_dot_u: f64, w_dot_u: f64, u_sq: f64) -> f64 {
+    if u_sq == 0.0 {
+        return v_dot_w;
+    }
+    v_dot_w - v_dot_u * w_dot_u / u_sq
+}
+
+/// Cached `‖u‖²` plus the vector itself, for repeated projections against
+/// a fixed `u` (e.g. `u = y` shared across all features).
+#[derive(Debug, Clone)]
+pub struct ProjCache {
+    /// The projection axis.
+    pub u: Vec<f64>,
+    /// `‖u‖²`, precomputed.
+    pub u_sq: f64,
+}
+
+impl ProjCache {
+    /// Builds a cache for axis `u`.
+    pub fn new(u: Vec<f64>) -> Self {
+        let u_sq = nrm2_sq(&u);
+        ProjCache { u, u_sq }
+    }
+
+    /// `P_u(v)` materialized.
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        if self.u_sq == 0.0 {
+            return v.to_vec();
+        }
+        let c = dot(v, &self.u) / self.u_sq;
+        v.iter().zip(&self.u).map(|(vi, ui)| vi - c * ui).collect()
+    }
+
+    /// `‖P_u(v)‖²` given `v` (computes the two dots).
+    pub fn norm_sq(&self, v: &[f64]) -> f64 {
+        proj_null_norm_sq(nrm2_sq(v), dot(v, &self.u), self.u_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vector::nrm2;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())), "{a} != {b}");
+    }
+
+    #[test]
+    fn projection_is_orthogonal_to_axis() {
+        let u = vec![1.0, 2.0, -1.0, 0.5];
+        let v = vec![3.0, -1.0, 4.0, 2.0];
+        let p = proj_null(&u, &v);
+        assert_close(dot(&p, &u), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let u = vec![0.3, -2.0, 1.1];
+        let v = vec![1.0, 1.0, 1.0];
+        let p1 = proj_null(&u, &v);
+        let p2 = proj_null(&u, &p1);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_close(*a, *b, 1e-12);
+        }
+    }
+
+    #[test]
+    fn scalar_identities_match_materialized() {
+        let u = vec![1.0, -1.0, 2.0, 0.0, 3.0];
+        let v = vec![2.0, 0.5, -1.0, 4.0, 1.0];
+        let w = vec![-1.0, 2.0, 2.0, 1.0, 0.5];
+        let pu_v = proj_null(&u, &v);
+        let pu_w = proj_null(&u, &w);
+        let u_sq = nrm2_sq(&u);
+        assert_close(
+            proj_null_norm_sq(nrm2_sq(&v), dot(&v, &u), u_sq),
+            nrm2(&pu_v).powi(2),
+            1e-12,
+        );
+        assert_close(
+            proj_null_dot(dot(&v, &w), dot(&v, &u), dot(&w, &u), u_sq),
+            dot(&pu_v, &pu_w),
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn zero_axis_is_identity() {
+        let u = vec![0.0, 0.0];
+        let v = vec![1.0, 2.0];
+        assert_eq!(proj_null(&u, &v), v);
+        assert_eq!(proj_null_norm_sq(5.0, 0.0, 0.0), 5.0);
+    }
+
+    #[test]
+    fn parallel_vector_projects_to_zero() {
+        let u = vec![1.0, 2.0, 3.0];
+        let v = vec![2.0, 4.0, 6.0];
+        let p = proj_null(&u, &v);
+        assert_close(nrm2(&p), 0.0, 1e-12);
+        // clamped identity must not go negative
+        let ns = proj_null_norm_sq(nrm2_sq(&v), dot(&v, &u), nrm2_sq(&u));
+        assert!(ns >= 0.0 && ns < 1e-10);
+    }
+
+    #[test]
+    fn cache_matches_free_functions() {
+        let cache = ProjCache::new(vec![1.0, -2.0, 0.5]);
+        let v = vec![3.0, 1.0, -1.0];
+        let direct = proj_null(&cache.u, &v);
+        assert_eq!(cache.apply(&v), direct);
+        assert_close(cache.norm_sq(&v), nrm2_sq(&direct), 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! Slice-level vector kernels.
+//!
+//! The 4-way unrolled [`dot4`] is the workhorse of the native screening
+//! path: each feature evaluation needs dot products against `y`, `1`,
+//! `θ₁` and its own squared norm, and computing all four in one pass over
+//! the feature column halves memory traffic versus four separate dots.
+
+/// Dot product of two equal-length slices.
+///
+/// Panics in debug builds if lengths differ.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc0 += a[i] * b[i];
+        acc1 += a[i + 1] * b[i + 1];
+        acc2 += a[i + 2] * b[i + 2];
+        acc3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for i in chunks * 4..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Simultaneously computes `fᵀy`, `fᵀ1`, `fᵀθ` and `‖f‖²` in one pass.
+///
+/// Returns `(f·y, f·ones, f·theta, f·f)`. This is the per-feature
+/// "statistics panel" the screening bound consumes (DESIGN.md §2) — the
+/// native analogue of the Pallas panel matmul.
+#[inline]
+pub fn dot4(f: &[f64], y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64) {
+    debug_assert_eq!(f.len(), y.len());
+    debug_assert_eq!(f.len(), theta.len());
+    let (mut dy, mut d1, mut dt, mut qq) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..f.len() {
+        let fi = f[i];
+        dy += fi * y[i];
+        d1 += fi;
+        dt += fi * theta[i];
+        qq += fi * fi;
+    }
+    (dy, d1, dt, qq)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(a: &[f64]) -> f64 {
+    nrm2_sq(a).sqrt()
+}
+
+/// Squared euclidean norm.
+#[inline]
+pub fn nrm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Sum of entries.
+#[inline]
+pub fn sum(a: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in a {
+        acc += x;
+    }
+    acc
+}
+
+/// `y += alpha * x` in place.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Scales a vector in place.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Returns `a + alpha * b` as a new vector.
+#[inline]
+pub fn add_scaled(a: &[f64], alpha: f64, b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + alpha * y).collect()
+}
+
+/// Returns `a - b` as a new vector.
+#[inline]
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        // length chosen to exercise the unroll remainder (4k+3)
+        let a: Vec<f64> = (0..19).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let b: Vec<f64> = (0..19).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot4_matches_separate_dots() {
+        let n = 37;
+        let f: Vec<f64> = (0..n).map(|i| (i as f64 * 0.77).cos()).collect();
+        let y: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let th: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin().abs()).collect();
+        let ones = vec![1.0; n];
+        let (dy, d1, dt, qq) = dot4(&f, &y, &th);
+        assert!((dy - dot(&f, &y)).abs() < 1e-12);
+        assert!((d1 - dot(&f, &ones)).abs() < 1e-12);
+        assert!((dt - dot(&f, &th)).abs() < 1e-12);
+        assert!((qq - dot(&f, &f)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn add_sub_helpers() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 5.0];
+        assert_eq!(add_scaled(&a, 2.0, &b), vec![7.0, 12.0]);
+        assert_eq!(sub(&b, &a), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_vectors() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(nrm2(&[]), 0.0);
+        assert_eq!(sum(&[]), 0.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! svmscreen — the launcher binary.
+//!
+//! See [`svmscreen::cli::USAGE`] for the command reference. Every
+//! subcommand resolves its configuration from an optional `--config`
+//! file plus CLI flags, builds the dataset, and drives the library.
+
+use svmscreen::cli::{parse_args, USAGE};
+use svmscreen::config::{RawConfig, RunConfig};
+use svmscreen::coordinator::server::{ScreeningServer, ServerConfig};
+use svmscreen::error::Result;
+use svmscreen::prelude::*;
+use svmscreen::report::table::fnum;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = parse_args(args)?;
+    if cli.command == "help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    // Merge config file (if any) under CLI flags.
+    let mut raw = match cli.flags.get("config") {
+        Some(path) => RawConfig::load(path)?,
+        None => RawConfig::default(),
+    };
+    // CLI flags override the file: re-apply them on top.
+    for key in [
+        "data", "rule", "solver", "steps", "min-frac", "tol", "workers", "engine",
+        "artifacts", "addr", "lambda-frac", "lambda2-frac", "out", "csv",
+    ] {
+        if let Some(v) = cli.flags.get(key) {
+            raw.set(key, v);
+        }
+    }
+    let cfg = RunConfig::from_raw(&raw)?;
+
+    match cli.command.as_str() {
+        "info" => cmd_info(&cfg),
+        "generate" => cmd_generate(&cfg, raw.get("out")),
+        "solve" => cmd_solve(&cfg, raw.get_f64("lambda-frac", 0.5)?),
+        "screen" => cmd_screen(&cfg, raw.get_f64("lambda2-frac", 0.5)?),
+        "path" => cmd_path(&cfg, raw.get("csv")),
+        "serve" => cmd_serve(&cfg),
+        other => Err(svmscreen::error::Error::config(format!(
+            "unknown command {other:?}"
+        ))),
+    }
+}
+
+fn load_problem(cfg: &RunConfig) -> Result<Problem> {
+    let ds = cfg.load_dataset()?;
+    println!("{}", ds.describe());
+    Ok(Problem::from_dataset(&ds))
+}
+
+fn cmd_info(cfg: &RunConfig) -> Result<()> {
+    let p = load_problem(cfg)?;
+    println!("lambda_max = {}", fnum(p.lambda_max()));
+    println!("b*         = {}", fnum(p.b_star()));
+    let ff = &p.lambda_max_stats().first_features;
+    println!("first feature(s) to activate: {ff:?}");
+    Ok(())
+}
+
+fn cmd_generate(cfg: &RunConfig, out: Option<&str>) -> Result<()> {
+    let ds = cfg.load_dataset()?;
+    let out = out.ok_or_else(|| svmscreen::error::Error::config("generate needs --out"))?;
+    let file = std::fs::File::create(out)?;
+    svmscreen::data::libsvm::save(&ds, std::io::BufWriter::new(file))?;
+    println!("wrote {} ({} samples, {} features)", out, ds.n(), ds.m());
+    Ok(())
+}
+
+fn cmd_solve(cfg: &RunConfig, lambda_frac: f64) -> Result<()> {
+    let p = load_problem(cfg)?;
+    let lambda = lambda_frac * p.lambda_max();
+    let rep = svmscreen::solver::api::solve(
+        cfg.solver,
+        &p.x,
+        &p.y,
+        lambda,
+        None,
+        &cfg.solve_options(),
+    )?;
+    println!(
+        "lambda = {} ({}·lambda_max)  solver={}",
+        fnum(lambda),
+        fnum(lambda_frac),
+        cfg.solver.name()
+    );
+    println!(
+        "nnz = {}  iterations = {}  rel_gap = {:.2e}  converged = {}  {:.3}s",
+        rep.nnz(),
+        rep.iterations,
+        rep.gap.rel_gap,
+        rep.converged,
+        rep.seconds
+    );
+    Ok(())
+}
+
+fn cmd_screen(cfg: &RunConfig, lambda2_frac: f64) -> Result<()> {
+    let p = load_problem(cfg)?;
+    let theta1 = p.theta_at_lambda_max().theta();
+    let l1 = p.lambda_max();
+    let l2 = lambda2_frac * l1;
+    let rep = if cfg.engine == "pjrt" {
+        let engine = svmscreen::runtime::PjrtEngine::load(&cfg.artifact_dir)?;
+        svmscreen::runtime::screen_all_pjrt(
+            &engine,
+            &p.x,
+            &p.y,
+            &theta1,
+            l1,
+            l2,
+            &svmscreen::runtime::PjrtScreenOptions::default(),
+        )?
+    } else {
+        svmscreen::coordinator::screen_all_parallel(
+            cfg.rule,
+            &p.x,
+            &p.y,
+            &theta1,
+            l1,
+            l2,
+            cfg.workers,
+        )?
+    };
+    println!(
+        "rule={} engine={} lambda2 = {}·lambda_max",
+        cfg.rule.name(),
+        cfg.engine,
+        fnum(lambda2_frac)
+    );
+    println!(
+        "screened {} / {} features ({:.1}% rejection) in {:.4}s",
+        rep.n_screened(),
+        p.m(),
+        100.0 * rep.rejection_ratio(),
+        rep.seconds
+    );
+    Ok(())
+}
+
+fn cmd_path(cfg: &RunConfig, csv: Option<&str>) -> Result<()> {
+    let p = load_problem(cfg)?;
+    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps);
+    let report = run_path(&p, &grid, &cfg.path_config())?;
+    println!("{}", report.summary_table());
+    let t = report.totals();
+    println!(
+        "totals: screen {:.3}s solve {:.3}s mean-rejection {:.1}%",
+        t.screen_seconds,
+        t.solve_seconds,
+        100.0 * t.mean_rejection
+    );
+    if let Some(path) = csv {
+        let rows: Vec<Vec<String>> =
+            report.steps.iter().map(|s| s.row().to_vec()).collect();
+        svmscreen::report::csv::write_file(
+            path,
+            &svmscreen::path::stats::PathStep::header(),
+            &rows,
+        )?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &RunConfig) -> Result<()> {
+    let p = load_problem(cfg)?;
+    let server = ScreeningServer::start(
+        p,
+        ServerConfig {
+            addr: cfg.addr.clone(),
+            workers: cfg.workers,
+            rule: cfg.rule,
+            solve: cfg.solve_options(),
+            ..Default::default()
+        },
+    )?;
+    println!("screening service listening on {}", server.addr);
+    println!("protocol: one JSON object per line; try {{\"cmd\":\"info\"}}");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

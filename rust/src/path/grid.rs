@@ -1,0 +1,51 @@
+//! λ-grid construction.
+
+/// Geometric grid of `count` values from `lambda_max` down to
+/// `min_frac * lambda_max` (exclusive of `lambda_max` itself, inclusive
+/// of the endpoint), descending — the standard path grid.
+pub fn geometric(lambda_max: f64, min_frac: f64, count: usize) -> Vec<f64> {
+    assert!(lambda_max > 0.0, "lambda_max must be positive");
+    assert!((0.0..1.0).contains(&min_frac) && min_frac > 0.0, "min_frac in (0,1)");
+    assert!(count >= 1);
+    let ratio = min_frac.powf(1.0 / count as f64);
+    (1..=count).map(|k| lambda_max * ratio.powi(k as i32)).collect()
+}
+
+/// Linear grid (used by gap-sweep experiments).
+pub fn linear(lambda_hi: f64, lambda_lo: f64, count: usize) -> Vec<f64> {
+    assert!(lambda_hi > lambda_lo && lambda_lo > 0.0);
+    assert!(count >= 2);
+    let step = (lambda_hi - lambda_lo) / (count - 1) as f64;
+    (0..count).map(|k| lambda_hi - step * k as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn geometric_endpoints_and_order() {
+        let g = geometric(10.0, 0.01, 20);
+        assert_eq!(g.len(), 20);
+        assert!(g[0] < 10.0);
+        assert_close(g[19], 0.1, 1e-9, "endpoint");
+        for k in 1..20 {
+            assert!(g[k] < g[k - 1], "descending");
+            // constant ratio
+            assert_close(g[k] / g[k - 1], g[1] / g[0], 1e-9, "ratio");
+        }
+    }
+
+    #[test]
+    fn linear_grid() {
+        let g = linear(5.0, 1.0, 5);
+        assert_eq!(g, vec![5.0, 4.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geometric_validates() {
+        geometric(10.0, 1.5, 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Regularization-path training with sequential safe screening — the
+//! workflow the paper's rule exists to accelerate.
+//!
+//! * [`grid`] — geometric λ-grids below `λ_max`.
+//! * [`runner`] — the sequential loop: screen(λ_{k−1} → λ_k) → reduced
+//!   solve (warm-started) → map to the dual → next step.
+//! * [`stats`] — per-step records and report tables.
+
+pub mod grid;
+pub mod runner;
+pub mod stats;
+
+pub use grid::geometric;
+pub use runner::{run_path, PathConfig, PathReport};
+pub use stats::PathStep;

@@ -1,0 +1,326 @@
+//! The sequential screening path runner.
+//!
+//! For a descending λ-grid below `λ_max`, each step:
+//!
+//! 1. **screen** the features for λ_k using the previous solved dual
+//!    point `(λ_{k−1}, θ_{k−1})` (the first step uses the closed-form
+//!    point at `λ_max`, footnote 1 of the paper);
+//! 2. **solve** the reduced problem over the kept features, warm-started
+//!    from the previous solution;
+//! 3. for **unsafe** rules (strong), verify the discarded features via
+//!    the KKT condition |θᵀf̂| ≤ 1 and re-solve with the violators added
+//!    back (the standard strong-rule repair loop);
+//! 4. map the solution to the dual via Eq. (20) for the next step.
+//!
+//! ### Approximation caveat (documented, measured in T2)
+//!
+//! The rule's derivation assumes `θ₁` is the *exact* dual optimum. We
+//! terminate solves at a certified duality gap ≤ `solve.tol`, so `θ₁`
+//! carries an O(√gap) error. With the default `tol = 1e−6` (and `1e−9`
+//! for safety audits) no violation was ever observed; T2 quantifies this.
+
+use crate::data::FeatureMatrix;
+use crate::error::Result;
+use crate::path::stats::{totals, PathStep, PathTotals};
+use crate::report::table::Table;
+use crate::screening::rule::{screen_all, RuleKind};
+use crate::solver::api::{SolveOptions, SolverKind};
+use crate::solver::reduced::ReducedProblem;
+use crate::svm::problem::Problem;
+
+/// Path-runner configuration.
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// Screening rule applied between steps.
+    pub rule: RuleKind,
+    /// Solver used for the reduced problems.
+    pub solver: SolverKind,
+    /// Per-step solver options.
+    pub solve: SolveOptions,
+    /// Tolerance for the unsafe-rule violation check (|θᵀf̂| > 1 + tol).
+    pub violation_tol: f64,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            rule: RuleKind::Paper,
+            solver: SolverKind::Cd,
+            solve: SolveOptions::default(),
+            violation_tol: 1e-4,
+        }
+    }
+}
+
+/// Full record of a path run.
+#[derive(Debug, Clone)]
+pub struct PathReport {
+    /// Problem name.
+    pub problem: String,
+    /// Configuration used.
+    pub rule: RuleKind,
+    /// Solver used.
+    pub solver: SolverKind,
+    /// Per-step records (in grid order).
+    pub steps: Vec<PathStep>,
+    /// The solutions' weight vectors per step.
+    pub weights: Vec<Vec<f64>>,
+    /// Bias per step.
+    pub biases: Vec<f64>,
+    /// Total wall-clock seconds.
+    pub total_seconds: f64,
+}
+
+impl PathReport {
+    /// Aggregated totals.
+    pub fn totals(&self) -> PathTotals {
+        totals(&self.steps)
+    }
+
+    /// A human-readable per-step table.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "path {} rule={} solver={} ({} steps, {:.3}s)",
+                self.problem,
+                self.rule.name(),
+                self.solver.name(),
+                self.steps.len(),
+                self.total_seconds
+            ),
+            &PathStep::header(),
+        );
+        for s in &self.steps {
+            t.row(&s.row());
+        }
+        t
+    }
+}
+
+/// Runs the sequential-screening path. `grid` must be descending and
+/// strictly below `problem.lambda_max()`.
+pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<PathReport> {
+    let t0 = std::time::Instant::now();
+    let m = problem.m();
+    let lmax = problem.lambda_max();
+
+    // Previous solved point: closed form at lambda_max.
+    let mut lambda_prev = lmax;
+    let mut theta_prev = problem.theta_at_lambda_max().theta();
+    let mut w_prev = vec![0.0; m];
+
+    let mut steps = Vec::with_capacity(grid.len());
+    let mut weights = Vec::with_capacity(grid.len());
+    let mut biases = Vec::with_capacity(grid.len());
+
+    for &lambda in grid {
+        if !(lambda < lambda_prev || (lambda < lmax && lambda > 0.0)) {
+            return Err(crate::error::Error::screening(format!(
+                "grid must descend below lambda_max: {lambda} vs prev {lambda_prev}"
+            )));
+        }
+        // 1. Screen (lambda_prev, theta_prev) -> lambda.
+        let screen = screen_all(
+            cfg.rule,
+            &problem.x,
+            &problem.y,
+            &theta_prev,
+            lambda_prev,
+            lambda,
+        )?;
+        let mut kept = screen.kept_indices();
+        let screen_seconds = screen.seconds;
+
+        // 2. Reduced solve with warm start.
+        let t_solve = std::time::Instant::now();
+        let mut violations = 0usize;
+        let (w, b, iterations, rel_gap) = loop {
+            let rep = if kept.len() == m {
+                crate::solver::api::solve(
+                    cfg.solver,
+                    &problem.x,
+                    &problem.y,
+                    lambda,
+                    Some(&w_prev),
+                    &cfg.solve,
+                )?
+            } else {
+                let red = ReducedProblem::build(&problem.x, kept.clone())?;
+                red.solve(cfg.solver, &problem.y, lambda, Some(&w_prev), &cfg.solve)?
+            };
+
+            // 3. Unsafe-rule repair loop: verify discarded features.
+            if cfg.rule.is_safe() {
+                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap);
+            }
+            let theta = crate::svm::dual::theta_from_primal(
+                &problem.x,
+                &problem.y,
+                &rep.w,
+                rep.b,
+                lambda,
+            );
+            let ytheta: Vec<f64> =
+                problem.y.iter().zip(&theta).map(|(a, b)| a * b).collect();
+            let kept_set: std::collections::HashSet<usize> =
+                kept.iter().copied().collect();
+            let mut violators: Vec<usize> = (0..m)
+                .filter(|j| !kept_set.contains(j))
+                .filter(|&j| problem.x.col_dot(j, &ytheta).abs() > 1.0 + cfg.violation_tol)
+                .collect();
+            if violators.is_empty() {
+                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap);
+            }
+            violations += violators.len();
+            kept.append(&mut violators);
+            kept.sort_unstable();
+        };
+        let solve_seconds = t_solve.elapsed().as_secs_f64();
+
+        // 4. Dual map for the next step.
+        theta_prev = crate::svm::dual::theta_from_primal(&problem.x, &problem.y, &w, b, lambda);
+        lambda_prev = lambda;
+
+        let nnz = w.iter().filter(|v| **v != 0.0).count();
+        steps.push(PathStep {
+            lambda,
+            lambda_frac: lambda / lmax,
+            kept: kept.len(),
+            screened: m - kept.len(),
+            rejection: (m - kept.len()) as f64 / m as f64,
+            nnz,
+            iterations,
+            rel_gap,
+            screen_seconds,
+            solve_seconds,
+            violations,
+        });
+        w_prev = w.clone();
+        weights.push(w);
+        biases.push(b);
+    }
+
+    Ok(PathReport {
+        problem: problem.name.clone(),
+        rule: cfg.rule,
+        solver: cfg.solver,
+        steps,
+        weights,
+        biases,
+        total_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::path::grid::geometric;
+    use crate::testkit::assert_close;
+
+    fn problem(seed: u64) -> Problem {
+        Problem::from_dataset(&SynthSpec::text(60, 150, seed).generate())
+    }
+
+    #[test]
+    fn screened_path_matches_unscreened_path() {
+        // THE correctness property of the whole system: safe screening
+        // must not change the solution path (same objectives per step).
+        let p = problem(111);
+        let grid = geometric(p.lambda_max(), 0.1, 8);
+        let precise = SolveOptions { tol: 1e-8, max_iter: 20000, ..Default::default() };
+        let none = run_path(
+            &p,
+            &grid,
+            &PathConfig { rule: RuleKind::None, solve: precise, ..Default::default() },
+        )
+        .unwrap();
+        let paper = run_path(
+            &p,
+            &grid,
+            &PathConfig { rule: RuleKind::Paper, solve: precise, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(none.steps.len(), paper.steps.len());
+        for k in 0..grid.len() {
+            let obj_none = crate::svm::objective::primal_objective(
+                &p.x, &p.y, &none.weights[k], none.biases[k], grid[k],
+            );
+            let obj_paper = crate::svm::objective::primal_objective(
+                &p.x, &p.y, &paper.weights[k], paper.biases[k], grid[k],
+            );
+            assert_close(obj_paper, obj_none, 1e-5, &format!("objective step {k}"));
+            // screening must never discard a feature active in the
+            // unscreened solution
+            for j in 0..p.m() {
+                if none.weights[k][j].abs() > 1e-6 {
+                    assert!(
+                        paper.steps[k].kept > 0,
+                        "sanity: kept set nonempty"
+                    );
+                }
+            }
+        }
+        // and screening actually did something
+        assert!(paper.totals().mean_rejection > 0.1, "{}", paper.totals().mean_rejection);
+    }
+
+    #[test]
+    fn rejection_decreases_along_path() {
+        // As lambda shrinks, more features become active -> rejection drops.
+        let p = problem(113);
+        let grid = geometric(p.lambda_max(), 0.05, 10);
+        let rep = run_path(&p, &grid, &PathConfig::default()).unwrap();
+        let first = rep.steps.first().unwrap().rejection;
+        let last = rep.steps.last().unwrap().rejection;
+        assert!(first > last, "rejection {first} -> {last}");
+        assert!(first >= 0.5, "near lambda_max rejection should be high: {first}");
+    }
+
+    #[test]
+    fn strong_rule_repair_loop_runs() {
+        let p = problem(115);
+        let grid = geometric(p.lambda_max(), 0.1, 6);
+        let rep = run_path(
+            &p,
+            &grid,
+            &PathConfig { rule: RuleKind::Strong, ..Default::default() },
+        )
+        .unwrap();
+        // The repair loop guarantees correctness even if violations occur;
+        // verify final solutions match the unscreened objective.
+        let none = run_path(
+            &p,
+            &grid,
+            &PathConfig { rule: RuleKind::None, ..Default::default() },
+        )
+        .unwrap();
+        for k in 0..grid.len() {
+            let o1 = crate::svm::objective::primal_objective(
+                &p.x, &p.y, &rep.weights[k], rep.biases[k], grid[k],
+            );
+            let o2 = crate::svm::objective::primal_objective(
+                &p.x, &p.y, &none.weights[k], none.biases[k], grid[k],
+            );
+            assert_close(o1, o2, 1e-4, &format!("strong-rule objective step {k}"));
+        }
+    }
+
+    #[test]
+    fn summary_table_renders() {
+        let p = problem(117);
+        let grid = geometric(p.lambda_max(), 0.3, 3);
+        let rep = run_path(&p, &grid, &PathConfig::default()).unwrap();
+        let table = rep.summary_table().to_string();
+        assert!(table.contains("paper"));
+        assert!(rep.totals().screen_seconds >= 0.0);
+        assert_eq!(rep.weights.len(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_grid() {
+        let p = problem(119);
+        let bad = vec![p.lambda_max() * 1.1];
+        assert!(run_path(&p, &bad, &PathConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-step path records.
+
+use crate::screening::RuleKind;
+
+/// One λ-step of a path run.
+#[derive(Debug, Clone)]
+pub struct PathStep {
+    /// The λ solved at this step.
+    pub lambda: f64,
+    /// `λ / λ_max`.
+    pub lambda_frac: f64,
+    /// Features kept by screening (solver input size).
+    pub kept: usize,
+    /// Features screened out.
+    pub screened: usize,
+    /// Rejection ratio `screened / m`.
+    pub rejection: f64,
+    /// Non-zeros in the solution.
+    pub nnz: usize,
+    /// Solver iterations.
+    pub iterations: usize,
+    /// Relative duality gap achieved.
+    pub rel_gap: f64,
+    /// Seconds spent screening.
+    pub screen_seconds: f64,
+    /// Seconds spent solving.
+    pub solve_seconds: f64,
+    /// Violations repaired at this step (unsafe rules only).
+    pub violations: usize,
+}
+
+impl PathStep {
+    /// Header row matching [`PathStep::row`].
+    pub fn header() -> [&'static str; 9] {
+        [
+            "lambda/lmax",
+            "kept",
+            "screened",
+            "reject%",
+            "nnz",
+            "iters",
+            "rel_gap",
+            "screen_s",
+            "solve_s",
+        ]
+    }
+
+    /// A table row for reports.
+    pub fn row(&self) -> [String; 9] {
+        [
+            format!("{:.4}", self.lambda_frac),
+            self.kept.to_string(),
+            self.screened.to_string(),
+            format!("{:.1}", 100.0 * self.rejection),
+            self.nnz.to_string(),
+            self.iterations.to_string(),
+            format!("{:.2e}", self.rel_gap),
+            format!("{:.4}", self.screen_seconds),
+            format!("{:.4}", self.solve_seconds),
+        ]
+    }
+}
+
+/// Aggregates over a whole path run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PathTotals {
+    /// Total screening seconds.
+    pub screen_seconds: f64,
+    /// Total solve seconds.
+    pub solve_seconds: f64,
+    /// Mean rejection ratio.
+    pub mean_rejection: f64,
+    /// Total violations repaired (unsafe rules).
+    pub violations: usize,
+}
+
+/// Computes totals from steps.
+pub fn totals(steps: &[PathStep]) -> PathTotals {
+    let mut t = PathTotals::default();
+    for s in steps {
+        t.screen_seconds += s.screen_seconds;
+        t.solve_seconds += s.solve_seconds;
+        t.mean_rejection += s.rejection;
+        t.violations += s.violations;
+    }
+    if !steps.is_empty() {
+        t.mean_rejection /= steps.len() as f64;
+    }
+    t
+}
+
+/// Human tag for a (rule, solver) configuration.
+pub fn config_tag(rule: RuleKind, solver: crate::solver::SolverKind) -> String {
+    format!("{}+{}", rule.name(), solver.name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(rej: f64, ss: f64, vs: usize) -> PathStep {
+        PathStep {
+            lambda: 1.0,
+            lambda_frac: 0.5,
+            kept: 10,
+            screened: 90,
+            rejection: rej,
+            nnz: 5,
+            iterations: 7,
+            rel_gap: 1e-7,
+            screen_seconds: ss,
+            solve_seconds: 2.0 * ss,
+            violations: vs,
+        }
+    }
+
+    #[test]
+    fn totals_aggregate() {
+        let t = totals(&[step(0.2, 1.0, 1), step(0.4, 2.0, 2)]);
+        assert_eq!(t.screen_seconds, 3.0);
+        assert_eq!(t.solve_seconds, 6.0);
+        assert!((t.mean_rejection - 0.3).abs() < 1e-12);
+        assert_eq!(t.violations, 3);
+    }
+
+    #[test]
+    fn row_and_header_align() {
+        let s = step(0.9, 0.1, 0);
+        assert_eq!(PathStep::header().len(), s.row().len());
+        assert_eq!(
+            config_tag(RuleKind::Paper, crate::solver::SolverKind::Cd),
+            "paper+cd"
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny CSV writer (no serde in the vendored crate set).
+//!
+//! Only the writing direction is needed: benches emit CSV series that the
+//! experiment log references. Quoting follows RFC 4180.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Encodes one CSV row (quoting cells containing `, " \n`).
+pub fn encode_row<S: AsRef<str>>(cells: &[S]) -> String {
+    cells
+        .iter()
+        .map(|c| encode_cell(c.as_ref()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn encode_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Streaming CSV writer.
+pub struct CsvWriter<W: Write> {
+    inner: W,
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Wraps a writer.
+    pub fn new(inner: W) -> Self {
+        CsvWriter { inner }
+    }
+
+    /// Writes one row.
+    pub fn write_row<S: AsRef<str>>(&mut self, cells: &[S]) -> std::io::Result<()> {
+        writeln!(self.inner, "{}", encode_row(cells))
+    }
+
+    /// Writes a row of displayable values.
+    pub fn write_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> std::io::Result<()> {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.write_row(&cells)
+    }
+}
+
+/// Writes a whole table of rows to a file path, creating parent dirs.
+pub fn write_file<P: AsRef<Path>, S: AsRef<str>>(
+    path: P,
+    headers: &[S],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = CsvWriter::new(std::io::BufWriter::new(std::fs::File::create(path)?));
+    w.write_row(headers)?;
+    for r in rows {
+        w.write_row(r)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_cells() {
+        assert_eq!(encode_row(&["a", "b", "1.5"]), "a,b,1.5");
+    }
+
+    #[test]
+    fn quoting() {
+        assert_eq!(encode_row(&["a,b", "c\"d"]), "\"a,b\",\"c\"\"d\"");
+        assert_eq!(encode_row(&["x\ny"]), "\"x\ny\"");
+    }
+
+    #[test]
+    fn writer_accumulates() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf);
+            w.write_row(&["h1", "h2"]).unwrap();
+            w.write_display(&[1, 2]).unwrap();
+        }
+        assert_eq!(String::from_utf8(buf).unwrap(), "h1,h2\n1,2\n");
+    }
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join("svmscreen_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub/out.csv");
+        write_file(&path, &["a"], &[vec!["1".into()]]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

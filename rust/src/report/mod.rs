@@ -1,0 +1,10 @@
+//! Reporting substrate: ASCII tables, CSV emission, timers and bench
+//! statistics. The vendored crate set has no `criterion`, so the bench
+//! harness in `benches/` builds on [`timer::BenchStats`].
+
+pub mod csv;
+pub mod table;
+pub mod timer;
+
+pub use table::Table;
+pub use timer::{BenchStats, Stopwatch};

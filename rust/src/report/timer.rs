@@ -1,0 +1,192 @@
+//! Timing and measurement substrate.
+//!
+//! The vendored crate set has no `criterion`, so `benches/` uses
+//! [`BenchStats::measure`]: warmup runs, then N timed samples, reported as
+//! median with p10/p90 spread — robust to scheduler noise in a container.
+
+use std::time::{Duration, Instant};
+
+/// A simple cumulative stopwatch with named restarts.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    total: Duration,
+    running: bool,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Creates a running stopwatch.
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now(), total: Duration::ZERO, running: true }
+    }
+
+    /// Creates a paused stopwatch with zero accumulated time.
+    pub fn paused() -> Self {
+        Stopwatch { start: Instant::now(), total: Duration::ZERO, running: false }
+    }
+
+    /// Resumes accumulation.
+    pub fn resume(&mut self) {
+        if !self.running {
+            self.start = Instant::now();
+            self.running = true;
+        }
+    }
+
+    /// Pauses accumulation.
+    pub fn pause(&mut self) {
+        if self.running {
+            self.total += self.start.elapsed();
+            self.running = false;
+        }
+    }
+
+    /// Accumulated seconds (includes the live segment if running).
+    pub fn seconds(&self) -> f64 {
+        let mut t = self.total;
+        if self.running {
+            t += self.start.elapsed();
+        }
+        t.as_secs_f64()
+    }
+}
+
+/// Robust summary of repeated timing samples.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Sorted per-iteration durations (seconds).
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Runs `f` `warmup` times unmeasured, then `samples` times measured.
+    pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Self {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut out = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            f();
+            out.push(t0.elapsed().as_secs_f64());
+        }
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats { samples: out }
+    }
+
+    /// Builds from raw (unsorted) samples.
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats { samples }
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let pos = q * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    /// Median sample (seconds).
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    /// 10th percentile (seconds).
+    pub fn p10(&self) -> f64 {
+        self.quantile(0.1)
+    }
+
+    /// 90th percentile (seconds).
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.9)
+    }
+
+    /// Mean (seconds).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Human-readable one-liner: `median [p10 .. p90]`.
+    pub fn display(&self) -> String {
+        format!(
+            "{} [{} .. {}]",
+            fmt_duration(self.median()),
+            fmt_duration(self.p10()),
+            fmt_duration(self.p90())
+        )
+    }
+}
+
+/// Pretty-prints a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        "n/a".into()
+    } else if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}us", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::paused();
+        assert_eq!(sw.seconds(), 0.0);
+        sw.resume();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.pause();
+        let t1 = sw.seconds();
+        assert!(t1 >= 0.004, "{t1}");
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(sw.seconds(), t1); // paused: unchanged
+    }
+
+    #[test]
+    fn stats_quantiles() {
+        let s = BenchStats::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.mean(), 3.0);
+        assert!(s.p10() >= 1.0 && s.p10() <= 2.0);
+        assert!(s.p90() >= 4.0 && s.p90() <= 5.0);
+    }
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut count = 0;
+        let s = BenchStats::measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500us");
+        assert_eq!(fmt_duration(2.5e-8), "25ns");
+        assert_eq!(fmt_duration(f64::NAN), "n/a");
+    }
+}

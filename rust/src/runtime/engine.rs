@@ -1,0 +1,163 @@
+//! The PJRT engine: client + compiled-artifact registry.
+//!
+//! Artifacts are discovered from `artifacts/` by filename convention
+//! (`screen_n{N}_b{B}.hlo.txt`, `grad_n{N}_m{M}.hlo.txt`), compiled once
+//! at load, and selected at execution time by "smallest compiled shape
+//! that fits" — inputs are zero-padded up to the compiled shape, which
+//! the kernels are built to treat as decision-neutral.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled screening executable: bounds for one (block_m, n) block.
+pub struct ScreenExe {
+    /// Compiled sample dimension (padded n).
+    pub n: usize,
+    /// Compiled feature-block size.
+    pub block_m: usize,
+    /// The loaded executable.
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// A compiled gradient executable for an (n, m) dense problem.
+pub struct GradExe {
+    /// Compiled sample dimension.
+    pub n: usize,
+    /// Compiled feature dimension.
+    pub m: usize,
+    /// The loaded executable.
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client plus the artifact registry.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    /// Screening executables keyed by compiled n (ascending).
+    pub screen: BTreeMap<usize, ScreenExe>,
+    /// Gradient executables keyed by (n, m).
+    pub grad: BTreeMap<(usize, usize), GradExe>,
+    /// Where the artifacts were loaded from.
+    pub artifact_dir: PathBuf,
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtEngine")
+            .field("platform", &self.client.platform_name())
+            .field("screen_shapes", &self.screen.keys().collect::<Vec<_>>())
+            .field("grad_shapes", &self.grad.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// Parses `screen_n{N}_b{B}` / `grad_n{N}_m{M}` stems.
+fn parse_stem(stem: &str) -> Option<(&'static str, usize, usize)> {
+    let parts: Vec<&str> = stem.split('_').collect();
+    if parts.len() != 3 {
+        return None;
+    }
+    let num = |s: &str, prefix: char| -> Option<usize> {
+        s.strip_prefix(prefix).and_then(|t| t.parse().ok())
+    };
+    match parts[0] {
+        "screen" => Some(("screen", num(parts[1], 'n')?, num(parts[2], 'b')?)),
+        "grad" => Some(("grad", num(parts[1], 'n')?, num(parts[2], 'm')?)),
+        _ => None,
+    }
+}
+
+impl PjrtEngine {
+    /// Creates the CPU client and compiles every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut engine = PjrtEngine {
+            client,
+            screen: BTreeMap::new(),
+            grad: BTreeMap::new(),
+            artifact_dir: dir.to_path_buf(),
+        };
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::runtime(format!("artifact dir {dir:?}: {e}")))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = match path.file_name().and_then(|s| s.to_str()) {
+                Some(n) if n.ends_with(".hlo.txt") => n,
+                _ => continue,
+            };
+            let stem = name.trim_end_matches(".hlo.txt");
+            if let Some((kind, a, b)) = parse_stem(stem) {
+                let exe = engine.compile_file(&path)?;
+                match kind {
+                    "screen" => {
+                        engine.screen.insert(a, ScreenExe { n: a, block_m: b, exe });
+                    }
+                    "grad" => {
+                        engine.grad.insert((a, b), GradExe { n: a, m: b, exe });
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        if engine.screen.is_empty() && engine.grad.is_empty() {
+            return Err(Error::runtime(format!(
+                "no artifacts found in {dir:?}; run `make artifacts`"
+            )));
+        }
+        Ok(engine)
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {path:?}: {e}")))
+    }
+
+    /// The smallest compiled screening shape with `n_compiled >= n`.
+    pub fn screen_exe_for(&self, n: usize) -> Option<&ScreenExe> {
+        self.screen.range(n..).next().map(|(_, e)| e)
+    }
+
+    /// The smallest compiled gradient shape covering `(n, m)`.
+    pub fn grad_exe_for(&self, n: usize, m: usize) -> Option<&GradExe> {
+        self.grad
+            .iter()
+            .filter(|((cn, cm), _)| *cn >= n && *cm >= m)
+            .min_by_key(|((cn, cm), _)| cn * cm)
+            .map(|(_, e)| e)
+    }
+
+    /// Default artifact dir relative to the repo root / cwd.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SVMSCREEN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stem_parsing() {
+        assert_eq!(parse_stem("screen_n1024_b256"), Some(("screen", 1024, 256)));
+        assert_eq!(parse_stem("grad_n256_m512"), Some(("grad", 256, 512)));
+        assert_eq!(parse_stem("bogus_n1_b2"), None);
+        assert_eq!(parse_stem("screen_x1_b2"), None);
+        assert_eq!(parse_stem("screen_n1"), None);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(PjrtEngine::load("/nonexistent/dir").is_err());
+    }
+
+    // Engine-with-artifacts tests live in rust/tests/runtime.rs (they
+    // need `make artifacts` to have run).
+}

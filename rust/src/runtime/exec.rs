@@ -1,0 +1,250 @@
+//! Typed executions over the PJRT engine.
+//!
+//! [`screen_all_pjrt`] is the AOT counterpart of
+//! [`crate::screening::rule::screen_all`]: same inputs, same decisions —
+//! modulo f32, which is why it applies a configurable *keep margin*
+//! (keep iff `bound ≥ 1 − margin`), erring on the side of keeping.
+//! Integration tests cross-validate the two implementations.
+
+use crate::data::FeatureMatrix;
+use crate::error::{Error, Result};
+use crate::runtime::engine::{GradExe, PjrtEngine, ScreenExe};
+use crate::runtime::literal::{literal_f32, to_f32};
+use crate::screening::precompute::SharedContext;
+use crate::screening::rule::{RuleKind, ScreenReport};
+
+/// Width of the `[y | 1 | θ₁ | 0…]` panel (mirrors python `V_COLS`).
+pub const V_COLS: usize = 8;
+/// Length of the shared scalar pack (mirrors python `SHARED_LEN`).
+pub const SHARED_LEN: usize = 24;
+
+/// Options for the PJRT screening pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PjrtScreenOptions {
+    /// Keep iff `bound ≥ 1 − keep_margin` — absorbs f32 kernel error.
+    /// 1e−3 keeps safety with a negligible loss of screening power.
+    pub keep_margin: f64,
+}
+
+impl Default for PjrtScreenOptions {
+    fn default() -> Self {
+        PjrtScreenOptions { keep_margin: 1e-3 }
+    }
+}
+
+/// Serializes a [`SharedContext`] into the kernel's f32 scalar pack
+/// (index layout shared with `python/compile/kernels/screen.py`).
+pub fn shared_pack(ctx: &SharedContext) -> [f32; SHARED_LEN] {
+    let mut s = [0.0f32; SHARED_LEN];
+    s[0] = ctx.inv1 as f32;
+    s[1] = ctx.inv2 as f32;
+    s[2] = ctx.ysq as f32;
+    s[3] = ctx.na as f32;
+    s[4] = if ctx.has_a { 1.0 } else { 0.0 };
+    s[5] = ctx.a_y as f32;
+    s[6] = ctx.a_1 as f32;
+    s[7] = ctx.a_t as f32;
+    s[8] = ctx.b_y as f32;
+    s[9] = ctx.b_sq as f32;
+    s[10] = ctx.pya_sq as f32;
+    s[11] = ctx.pyb_sq as f32;
+    s[12] = ctx.pya_pyb as f32;
+    s[13] = ctx.pay_sq as f32;
+    s[14] = ctx.pa1_sq as f32;
+    s[15] = ctx.pa1_pay as f32;
+    s[16] = ctx.ppay_pa1_sq as f32;
+    s
+}
+
+/// Builds the `(n_pad, V_COLS)` row-major panel.
+pub fn build_v_panel(y: &[f64], theta1: &[f64], n_pad: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n_pad * V_COLS];
+    for i in 0..y.len() {
+        v[i * V_COLS] = y[i] as f32;
+        v[i * V_COLS + 1] = 1.0;
+        v[i * V_COLS + 2] = theta1[i] as f32;
+    }
+    v
+}
+
+/// Fills one `(block_m, n_pad)` row-major weighted-feature block.
+/// Rows past the feature range stay zero (decision-neutral padding).
+pub fn fill_xhat_block<X: FeatureMatrix>(
+    x: &X,
+    y: &[f64],
+    j0: usize,
+    block_m: usize,
+    n_pad: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), block_m * n_pad);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let m = x.n_features();
+    for jj in 0..block_m {
+        let j = j0 + jj;
+        if j >= m {
+            break;
+        }
+        let row = &mut out[jj * n_pad..(jj + 1) * n_pad];
+        x.col_visit(j, &mut |i, v| {
+            row[i] = (v * y[i]) as f32;
+        });
+    }
+}
+
+impl ScreenExe {
+    /// Executes the bound kernel for one feature block.
+    pub fn run(&self, xhat_block: &[f32], v: &[f32], shared: &[f32]) -> Result<Vec<f32>> {
+        let lits = [
+            literal_f32(xhat_block, &[self.block_m, self.n])?,
+            literal_f32(v, &[self.n, V_COLS])?,
+            literal_f32(shared, &[SHARED_LEN])?,
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::runtime(format!("screen execute: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("screen sync: {e}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("screen tuple: {e}")))?;
+        to_f32(&out)
+    }
+}
+
+impl GradExe {
+    /// Executes the gradient graph: returns `(grad_w, grad_b, loss)`.
+    pub fn run(&self, x: &[f32], y: &[f32], w: &[f32], b: f32) -> Result<(Vec<f32>, f32, f32)> {
+        let lits = [
+            literal_f32(x, &[self.n, self.m])?,
+            literal_f32(y, &[self.n])?,
+            literal_f32(w, &[self.m])?,
+            literal_f32(&[b], &[1])?,
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| Error::runtime(format!("grad execute: {e}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("grad sync: {e}")))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("grad tuple: {e}")))?;
+        if parts.len() != 3 {
+            return Err(Error::runtime(format!("grad arity {}", parts.len())));
+        }
+        let gw = to_f32(&parts[0])?;
+        let gb = to_f32(&parts[1])?[0];
+        let loss = to_f32(&parts[2])?[0];
+        Ok((gw, gb, loss))
+    }
+}
+
+/// The full screening pass through the PJRT engine — AOT counterpart of
+/// [`crate::screening::rule::screen_all`] for the paper rule.
+pub fn screen_all_pjrt<X: FeatureMatrix>(
+    engine: &PjrtEngine,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2: f64,
+    opts: &PjrtScreenOptions,
+) -> Result<ScreenReport> {
+    let t0 = std::time::Instant::now();
+    let n = x.n_samples();
+    let m = x.n_features();
+    let exe = engine
+        .screen_exe_for(n)
+        .ok_or_else(|| Error::runtime(format!("no screen artifact covers n={n}")))?;
+    let n_pad = exe.n;
+    let bm = exe.block_m;
+
+    // Shared scalars in f64 (reusing the native precompute), cast once.
+    let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
+    let shared = shared_pack(&ctx);
+    let v = build_v_panel(y, theta1, n_pad);
+
+    let mut keep = vec![true; m];
+    let mut bounds = vec![f64::INFINITY; m];
+    let threshold = 1.0 - opts.keep_margin;
+    let mut block = vec![0.0f32; bm * n_pad];
+    let mut j0 = 0;
+    while j0 < m {
+        fill_xhat_block(x, y, j0, bm, n_pad, &mut block);
+        let out = exe.run(&block, &v, &shared)?;
+        for jj in 0..bm.min(m - j0) {
+            let u = out[jj] as f64;
+            bounds[j0 + jj] = u;
+            keep[j0 + jj] = u >= threshold;
+        }
+        j0 += bm;
+    }
+    Ok(ScreenReport {
+        rule: RuleKind::Paper,
+        lambda1,
+        lambda2,
+        keep,
+        bounds,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::svm::problem::Problem;
+
+    #[test]
+    fn shared_pack_layout() {
+        let p = Problem::from_dataset(&SynthSpec::dense(20, 10, 121).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let ctx = SharedContext::build(
+            &p.y,
+            &theta1,
+            p.lambda_max(),
+            0.5 * p.lambda_max(),
+        )
+        .unwrap();
+        let s = shared_pack(&ctx);
+        assert_eq!(s[0] as f64, ctx.inv1 as f32 as f64);
+        assert_eq!(s[1] as f64, ctx.inv2 as f32 as f64);
+        assert_eq!(s.len(), SHARED_LEN);
+        // padding slots zero
+        assert_eq!(s[17], 0.0);
+        assert_eq!(s[23], 0.0);
+    }
+
+    #[test]
+    fn v_panel_layout() {
+        let y = vec![1.0, -1.0];
+        let t = vec![0.25, 0.5];
+        let v = build_v_panel(&y, &t, 4);
+        assert_eq!(v.len(), 4 * V_COLS);
+        assert_eq!(v[0], 1.0); // y_0
+        assert_eq!(v[1], 1.0); // ones
+        assert_eq!(v[2], 0.25); // theta_0
+        assert_eq!(v[V_COLS], -1.0); // y_1
+        // padded rows zero
+        assert!(v[2 * V_COLS..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn xhat_block_fill() {
+        let ds = SynthSpec::dense(3, 4, 123).generate();
+        let mut out = vec![9.0f32; 2 * 5];
+        fill_xhat_block(&ds.x, &ds.y, 2, 2, 5, &mut out);
+        // row 0 = feature 2 weighted, row 1 = feature 3 weighted
+        let mut col = vec![0.0; 3];
+        use crate::data::FeatureMatrix;
+        ds.x.densify_col(2, &mut col);
+        for i in 0..3 {
+            assert!((out[i] as f64 - col[i] * ds.y[i]).abs() < 1e-6);
+        }
+        // padded sample column zero
+        assert_eq!(out[3], 0.0);
+        assert_eq!(out[4], 0.0);
+    }
+}

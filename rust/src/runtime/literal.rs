@@ -1,0 +1,55 @@
+//! `xla::Literal` ⇄ slice helpers.
+
+use crate::error::{Error, Result};
+
+/// Builds an f32 literal of the given dims from a row-major slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product();
+    if data.len() != expect {
+        return Err(Error::runtime(format!(
+            "literal payload {} != shape product {expect}",
+            data.len()
+        )));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+    lit.reshape(&dims_i64)
+        .map_err(|e| Error::runtime(format!("reshape: {e}")))
+}
+
+/// Extracts a literal into `Vec<f32>`.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+}
+
+/// Copies `src` (len ≤ pad_len) into a zero-padded vector of `pad_len`.
+pub fn pad_f32(src: &[f64], pad_len: usize) -> Vec<f32> {
+    assert!(src.len() <= pad_len);
+    let mut out = vec![0.0f32; pad_len];
+    for (o, s) in out.iter_mut().zip(src) {
+        *o = *s as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_copies_and_zeros() {
+        let p = pad_f32(&[1.0, 2.0], 4);
+        assert_eq!(p, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn literal_shape_validated() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

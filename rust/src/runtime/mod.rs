@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//!
+//! * [`engine`] — the [`engine::PjrtEngine`]: PJRT CPU client + artifact
+//!   registry keyed by compiled shape (discovered from filenames).
+//! * [`literal`] — `Literal` ⇄ slice helpers and padding.
+//! * [`exec`] — typed executions: the PJRT screening pass
+//!   ([`exec::screen_all_pjrt`]) and the gradient step, each
+//!   cross-validated against the native rust implementations in
+//!   integration tests.
+//!
+//! Python never runs at serving time: the artifacts are plain HLO text
+//! (the interchange format xla_extension 0.5.1 accepts — serialized
+//! jax ≥ 0.5 protos are rejected for their 64-bit instruction ids).
+
+pub mod engine;
+pub mod exec;
+pub mod literal;
+
+pub use engine::PjrtEngine;
+pub use exec::{screen_all_pjrt, PjrtScreenOptions};

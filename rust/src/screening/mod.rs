@@ -1,0 +1,63 @@
+//! The paper's contribution: safe feature screening for the sparse SVM.
+//!
+//! Given a solved dual point `(λ₁, θ₁)` and a target `λ₂ < λ₁`, the rule
+//! upper-bounds `max_{θ∈K} |θᵀf̂_j|` for every feature over the convex set
+//!
+//! ```text
+//! K = { θ : ‖θ − c‖ ≤ ‖b‖,  aᵀ(θ − θ₁) ≥ 0,  θᵀy = 0 }
+//! a ∝ θ₁ − 1/λ₁,  b = ½(1/λ₂ − θ₁),  c = ½(1/λ₂ + θ₁)      (Eq. 43)
+//! ```
+//!
+//! and discards every feature whose bound is < 1 (necessary condition
+//! for activity, Eq. 22). The bound has three closed-form KKT cases
+//! (Theorems 6.5 / 6.7 / 6.9), implemented in [`paper`] on top of the
+//! shared precompute in [`precompute`].
+//!
+//! * [`precompute`] — shared scalars + the per-feature statistics panel.
+//! * [`paper`] — the 3-case `neg_min` bound and its case selector.
+//! * [`variants`] — ball-only and plain-sphere relaxations (ablation
+//!   baselines) and the *unsafe* strong rule.
+//! * [`rule`] — the [`rule::ScreeningRule`] façade used by the path
+//!   runner and the coordinator.
+//! * [`qcqp_ref`] — slow numerical reference optimizer for the bound
+//!   (tests only: certifies the closed forms).
+//!
+//! ## Two corrections to the paper's printed formulas
+//!
+//! Both are verified against the numerical reference (`qcqp_ref`) and the
+//! end-to-end safety tests; the printed forms are not valid bounds.
+//!
+//! **1. Half-space sign (Eq. 43 rewrite / Algorithm 1 conditions).**
+//! Since `θ₂ − θ₁ = b + r` identically (with `b = ½(1/λ₂·1 − θ₁)`,
+//! `c = ½(1/λ₂·1 + θ₁)`, `θ₂ = c + r`), the variational-inequality
+//! half-space of Eq. (31), `(θ₁ − 1/λ₁)ᵀ(θ₂ − θ₁) ≥ 0`, reads
+//! `aᵀ(b + r) ≥ 0` — the paper's rewritten set K (and the §6.3–6.6
+//! case analysis built on it) uses `aᵀ(b + r) ≤ 0`, the wrong side.
+//! The case derivations are valid for the constraint `âᵀ(b + r) ≤ 0`
+//! with `â = −a`, so we substitute `a → −a` in the case conditions and
+//! the Thm 6.5 value; the Thm 6.9 value only sees `a` through `P_a`
+//! projections and is sign-invariant. With the printed sign, the
+//! half-space-binding formulas bound the wrong region of the ball (and
+//! in practice the binding case essentially never triggers, silently
+//! reducing the rule to the ball test).
+//!
+//! **2. Eq. (97) term placement.** The paper prints the `f̂ᵀθ₁` term
+//! *inside* the `½(1/λ₂ − 1/λ₁)(·)` bracket. Re-deriving from Eq. (96)
+//! and `ĉ = ½(1/λ₂ − 1/λ₁)P_a(1) + θ₁` puts it outside:
+//!
+//! ```text
+//! −min θᵀf̂ = ½(1/λ₂−1/λ₁)·(‖P_{P_a(y)}(P_a f̂)‖‖P_{P_a(y)}(P_a 1)‖
+//!                           − P_{P_a(y)}(P_a 1)ᵀ P_{P_a(y)}(P_a f̂))
+//!            − f̂ᵀθ₁
+//! ```
+
+pub mod gapball;
+pub mod paper;
+pub mod precompute;
+pub mod qcqp_ref;
+pub mod rule;
+pub mod variants;
+
+pub use gapball::gap_ball_bounds;
+pub use precompute::{FeatureStats, SharedContext};
+pub use rule::{screen_all, RuleKind, ScreenReport, ScreeningRule};

@@ -1,0 +1,360 @@
+//! Shared precompute for the screening bound.
+//!
+//! §6.4/§6.5 of the paper observe that everything in the bound except
+//! `f̂ᵀθ₁`, `f̂ᵀy`, `f̂ᵀ1`, `‖f̂‖²` is either independent of the feature
+//! (functions of λ₁, λ₂, θ₁, y, 1 alone) or derivable from those four
+//! dots. [`SharedContext`] materializes the feature-independent scalars
+//! once; [`FeatureStats`] carries the four per-feature dots (produced by
+//! [`crate::data::FeatureMatrix::col_dot4`] natively, or by the Pallas
+//! panel kernel on the PJRT path).
+
+use crate::data::FeatureMatrix;
+use crate::error::{Error, Result};
+use crate::linalg::{proj_null_dot, proj_null_norm_sq};
+
+/// The four per-feature dots the bound consumes.
+///
+/// For the weighted feature `f̂ = Y f`: `dy = f̂ᵀy = fᵀ1`-weighted... no —
+/// all dots here are against the *weighted* feature:
+/// `dy = f̂ᵀy`, `d1 = f̂ᵀ1`, `dt = f̂ᵀθ₁`, `q = ‖f̂‖² (= ‖f‖²)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeatureStats {
+    /// `f̂ᵀ y`.
+    pub dy: f64,
+    /// `f̂ᵀ 1`.
+    pub d1: f64,
+    /// `f̂ᵀ θ₁`.
+    pub dt: f64,
+    /// `‖f̂‖²`.
+    pub q: f64,
+}
+
+impl FeatureStats {
+    /// Stats of `−f̂` (the squared norm is invariant).
+    #[inline]
+    pub fn neg(&self) -> FeatureStats {
+        FeatureStats { dy: -self.dy, d1: -self.d1, dt: -self.dt, q: self.q }
+    }
+
+    /// Computes the stats for feature `j` natively.
+    ///
+    /// Since `f̂ = Yf` and `Y² = I`:
+    /// `f̂ᵀy = fᵀ(Y y) = fᵀ1`… careful: `f̂ᵀy = (Yf)ᵀy = fᵀYy = fᵀ1²…`
+    /// elementwise `Yy = y∘y = 1`, so `f̂ᵀy = fᵀ1`; similarly
+    /// `f̂ᵀ1 = fᵀy` and `f̂ᵀθ₁ = fᵀ(y∘θ₁)`. One pass over the raw column
+    /// with [`FeatureMatrix::col_dot4`] against `(y, ·, y∘θ₁)` yields all
+    /// four.
+    pub fn compute<X: FeatureMatrix>(x: &X, j: usize, y: &[f64], ytheta1: &[f64]) -> Self {
+        // col_dot4 returns (f·y, f·1, f·ytheta1, ‖f‖²)
+        let (f_y, f_1, f_yt, q) = x.col_dot4(j, y, ytheta1);
+        FeatureStats { dy: f_1, d1: f_y, dt: f_yt, q }
+    }
+}
+
+/// Feature-independent scalars for one `(λ₁, θ₁) → λ₂` screening step.
+#[derive(Debug, Clone)]
+pub struct SharedContext {
+    /// Source λ (the solved one).
+    pub lambda1: f64,
+    /// Target λ (the one being screened for).
+    pub lambda2: f64,
+    /// `1/λ₁`.
+    pub inv1: f64,
+    /// `1/λ₂`.
+    pub inv2: f64,
+    /// Number of samples `n = ‖1‖²`.
+    pub n: f64,
+    /// `yᵀ1`.
+    pub y1: f64,
+    /// `‖y‖²` (= n for ±1 labels, kept general).
+    pub ysq: f64,
+    /// `θ₁ᵀ1`.
+    pub t_sum: f64,
+    /// `θ₁ᵀy` (0 at an exact dual point; kept for robustness).
+    pub t_y: f64,
+    /// `‖θ₁‖²`.
+    pub t_sq: f64,
+    /// `‖θ₁ − 1/λ₁·1‖` — the normalizer of `a`. May be 0 (see `has_a`).
+    pub na: f64,
+    /// Whether the half-space normal `a` is well-defined (`na > 0`).
+    pub has_a: bool,
+    /// `aᵀy`, `aᵀ1`, `aᵀθ₁` (all 0 when `!has_a`).
+    pub a_y: f64,
+    /// `aᵀ1`.
+    pub a_1: f64,
+    /// `aᵀθ₁`.
+    pub a_t: f64,
+    /// `bᵀy` where `b = ½(1/λ₂·1 − θ₁)`.
+    pub b_y: f64,
+    /// `bᵀθ₁`.
+    pub b_t: f64,
+    /// `‖b‖²`.
+    pub b_sq: f64,
+    /// `‖P_y(a)‖²`.
+    pub pya_sq: f64,
+    /// `‖P_y(b)‖²`.
+    pub pyb_sq: f64,
+    /// `P_y(a)ᵀP_y(b)`.
+    pub pya_pyb: f64,
+    /// `P_a(y)ᵀP_a(y)`.
+    pub pay_sq: f64,
+    /// `P_a(1)ᵀP_a(1)`.
+    pub pa1_sq: f64,
+    /// `P_a(1)ᵀP_a(y)`.
+    pub pa1_pay: f64,
+    /// `‖P_{P_a(y)}(P_a(1))‖²`.
+    pub ppay_pa1_sq: f64,
+    /// Copy of `y∘θ₁` for building per-feature stats.
+    pub ytheta1: Vec<f64>,
+}
+
+impl SharedContext {
+    /// Builds the context. `theta1` must be the dual point at `lambda1`
+    /// (`θ = α/λ`, Eq. 20), and `lambda_max ≥ lambda1 > lambda2 > 0`.
+    pub fn build(y: &[f64], theta1: &[f64], lambda1: f64, lambda2: f64) -> Result<Self> {
+        if !(lambda1 > lambda2 && lambda2 > 0.0) {
+            return Err(Error::screening(format!(
+                "need lambda1 > lambda2 > 0, got {lambda1} vs {lambda2}"
+            )));
+        }
+        if y.len() != theta1.len() {
+            return Err(Error::screening("y / theta1 length mismatch"));
+        }
+        let n = y.len() as f64;
+        let inv1 = 1.0 / lambda1;
+        let inv2 = 1.0 / lambda2;
+        // All sums are computed over the *elementwise* expressions rather
+        // than expanded polynomials in the raw moments: the expansions
+        // (e.g. ‖θ₁ − inv1·1‖² = t_sq − 2·inv1·t_sum + inv1²·n) cancel
+        // catastrophically when θ₁ ≈ inv1·1, which genuinely happens at
+        // λ₁ = λ_max with near-balanced classes.
+        let mut y1 = 0.0;
+        let mut ysq = 0.0;
+        let mut t_sum = 0.0;
+        let mut t_y = 0.0;
+        let mut t_sq = 0.0;
+        let mut na_sq = 0.0; // ‖θ₁ − inv1·1‖²
+        let mut ar_y = 0.0; // (θ₁ − inv1·1)ᵀ y
+        let mut ar_1 = 0.0; // (θ₁ − inv1·1)ᵀ 1
+        let mut ar_t = 0.0; // (θ₁ − inv1·1)ᵀ θ₁
+        let mut b_y = 0.0; // bᵀy,  b = ½(inv2·1 − θ₁)
+        let mut b_t = 0.0; // bᵀθ₁
+        let mut b_sq = 0.0; // ‖b‖²
+        let mut ar_b = 0.0; // (θ₁ − inv1·1)ᵀ b
+        for i in 0..y.len() {
+            let yi = y[i];
+            let ti = theta1[i];
+            let ai = ti - inv1;
+            let bi = 0.5 * (inv2 - ti);
+            y1 += yi;
+            ysq += yi * yi;
+            t_sum += ti;
+            t_y += ti * yi;
+            t_sq += ti * ti;
+            na_sq += ai * ai;
+            ar_y += ai * yi;
+            ar_1 += ai;
+            ar_t += ai * ti;
+            b_y += bi * yi;
+            b_t += bi * ti;
+            b_sq += bi * bi;
+            ar_b += ai * bi;
+        }
+        let na = na_sq.sqrt();
+        let has_a = na > 1e-12 * (1.0 + inv1 * n.sqrt());
+        let (a_y, a_1, a_t, a_b) = if has_a {
+            (ar_y / na, ar_1 / na, ar_t / na, ar_b / na)
+        } else {
+            (0.0, 0.0, 0.0, 0.0)
+        };
+
+        let pya_sq = proj_null_norm_sq(if has_a { 1.0 } else { 0.0 }, a_y, ysq);
+        let pyb_sq = proj_null_norm_sq(b_sq, b_y, ysq);
+        let pya_pyb = proj_null_dot(a_b, a_y, b_y, ysq);
+
+        // P_a projections (a is unit when it exists).
+        let (pay_sq, pa1_sq, pa1_pay) = if has_a {
+            (
+                (ysq - a_y * a_y).max(0.0),
+                (n - a_1 * a_1).max(0.0),
+                y1 - a_1 * a_y,
+            )
+        } else {
+            (ysq, n, y1)
+        };
+        let ppay_pa1_sq = proj_null_norm_sq(pa1_sq, pa1_pay, pay_sq);
+
+        Ok(SharedContext {
+            lambda1,
+            lambda2,
+            inv1,
+            inv2,
+            n,
+            y1,
+            ysq,
+            t_sum,
+            t_y,
+            t_sq,
+            na,
+            has_a,
+            a_y,
+            a_1,
+            a_t,
+            b_y,
+            b_t,
+            b_sq,
+            pya_sq,
+            pyb_sq,
+            pya_pyb,
+            pay_sq,
+            pa1_sq,
+            pa1_pay,
+            ppay_pa1_sq,
+            ytheta1: y.iter().zip(theta1).map(|(yi, ti)| yi * ti).collect(),
+        })
+    }
+
+    /// Derived per-feature scalars: `aᵀf̂` from the stats panel.
+    #[inline]
+    pub fn a_f(&self, s: &FeatureStats) -> f64 {
+        if self.has_a {
+            (s.dt - self.inv1 * s.d1) / self.na
+        } else {
+            0.0
+        }
+    }
+
+    /// `bᵀf̂ = ½(1/λ₂·f̂ᵀ1 − f̂ᵀθ₁)`.
+    #[inline]
+    pub fn b_f(&self, s: &FeatureStats) -> f64 {
+        0.5 * (self.inv2 * s.d1 - s.dt)
+    }
+
+    /// `cᵀf̂ = ½(1/λ₂·f̂ᵀ1 + f̂ᵀθ₁)`.
+    #[inline]
+    pub fn c_f(&self, s: &FeatureStats) -> f64 {
+        0.5 * (self.inv2 * s.d1 + s.dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::data::FeatureMatrix;
+    use crate::linalg::{dot, nrm2_sq, proj_null};
+    use crate::svm::problem::Problem;
+    use crate::testkit::assert_close;
+
+    /// Brute-force context quantities from materialized vectors.
+    fn check_against_materialized(
+        y: &[f64],
+        theta1: &[f64],
+        l1: f64,
+        l2: f64,
+    ) {
+        let ctx = SharedContext::build(y, theta1, l1, l2).unwrap();
+        let n = y.len();
+        let ones = vec![1.0; n];
+        let a_raw: Vec<f64> = theta1.iter().map(|t| t - 1.0 / l1).collect();
+        let na = nrm2_sq(&a_raw).sqrt();
+        assert_close(ctx.na, na, 1e-12, "na");
+        if na > 1e-10 {
+            let a: Vec<f64> = a_raw.iter().map(|v| v / na).collect();
+            assert_close(ctx.a_y, dot(&a, y), 1e-10, "a.y");
+            assert_close(ctx.a_1, dot(&a, &ones), 1e-10, "a.1");
+            assert_close(ctx.a_t, dot(&a, theta1), 1e-10, "a.theta1");
+            let pya = proj_null(y, &a);
+            assert_close(ctx.pya_sq, nrm2_sq(&pya), 1e-10, "‖P_y a‖²");
+            let pay = proj_null(&a, y);
+            let pa1 = proj_null(&a, &ones);
+            assert_close(ctx.pay_sq, nrm2_sq(&pay), 1e-9, "‖P_a y‖²");
+            assert_close(ctx.pa1_sq, nrm2_sq(&pa1), 1e-9, "‖P_a 1‖²");
+            assert_close(ctx.pa1_pay, dot(&pa1, &pay), 1e-9, "P_a1 · P_a y");
+            let pp = proj_null(&pay, &pa1);
+            assert_close(ctx.ppay_pa1_sq, nrm2_sq(&pp), 1e-9, "‖P_Pay Pa1‖²");
+        }
+        let b: Vec<f64> = theta1.iter().map(|t| 0.5 * (1.0 / l2 - t)).collect();
+        assert_close(ctx.b_sq, nrm2_sq(&b), 1e-10, "‖b‖²");
+        assert_close(ctx.b_y, dot(&b, y), 1e-10, "b.y");
+        let pyb = proj_null(y, &b);
+        assert_close(ctx.pyb_sq, nrm2_sq(&pyb), 1e-10, "‖P_y b‖²");
+        if na > 1e-10 {
+            let a: Vec<f64> = a_raw.iter().map(|v| v / na).collect();
+            let pya = proj_null(y, &a);
+            assert_close(ctx.pya_pyb, dot(&pya, &pyb), 1e-10, "P_y a · P_y b");
+        }
+    }
+
+    #[test]
+    fn context_matches_materialized_at_lambda_max() {
+        let ds = SynthSpec::dense(30, 10, 61).generate();
+        let p = Problem::from_dataset(&ds);
+        let dp = p.theta_at_lambda_max();
+        let theta1 = dp.theta();
+        let l1 = p.lambda_max();
+        check_against_materialized(&p.y, &theta1, l1, 0.6 * l1);
+    }
+
+    #[test]
+    fn context_matches_materialized_generic_theta() {
+        // Arbitrary (not-even-feasible) theta1 exercises the algebra.
+        let y: Vec<f64> = (0..15).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let theta1: Vec<f64> = (0..15).map(|i| 0.1 + 0.02 * i as f64).collect();
+        check_against_materialized(&y, &theta1, 2.0, 1.2);
+    }
+
+    #[test]
+    fn per_feature_derivations() {
+        let ds = SynthSpec::dense(25, 8, 63).generate();
+        let p = Problem::from_dataset(&ds);
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        let ctx = SharedContext::build(&p.y, &theta1, l1, 0.5 * l1).unwrap();
+        let ones = vec![1.0; 25];
+        for j in 0..8 {
+            let s = FeatureStats::compute(&p.x, j, &p.y, &ctx.ytheta1);
+            // materialize fhat = Y f
+            let mut f = vec![0.0; 25];
+            p.x.densify_col(j, &mut f);
+            let fhat: Vec<f64> = f.iter().zip(&p.y).map(|(v, yi)| v * yi).collect();
+            assert_close(s.dy, dot(&fhat, &p.y), 1e-10, "dy");
+            assert_close(s.d1, dot(&fhat, &ones), 1e-10, "d1");
+            assert_close(s.dt, dot(&fhat, &theta1), 1e-10, "dt");
+            assert_close(s.q, nrm2_sq(&fhat), 1e-10, "q");
+            // derived
+            let a_raw: Vec<f64> = theta1.iter().map(|t| t - 1.0 / l1).collect();
+            let na = nrm2_sq(&a_raw).sqrt();
+            let a: Vec<f64> = a_raw.iter().map(|v| v / na).collect();
+            assert_close(ctx.a_f(&s), dot(&a, &fhat), 1e-9, "a.fhat");
+            let b: Vec<f64> = theta1.iter().map(|t| 0.5 * (ctx.inv2 - t)).collect();
+            assert_close(ctx.b_f(&s), dot(&b, &fhat), 1e-9, "b.fhat");
+            let c: Vec<f64> = theta1.iter().map(|t| 0.5 * (ctx.inv2 + t)).collect();
+            assert_close(ctx.c_f(&s), dot(&c, &fhat), 1e-9, "c.fhat");
+            // negation flips the linear stats
+            let neg = s.neg();
+            assert_eq!(neg.q, s.q);
+            assert_eq!(neg.dy, -s.dy);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lambdas() {
+        let y = vec![1.0, -1.0];
+        let t = vec![0.5, 0.5];
+        assert!(SharedContext::build(&y, &t, 1.0, 1.0).is_err());
+        assert!(SharedContext::build(&y, &t, 1.0, 2.0).is_err());
+        assert!(SharedContext::build(&y, &t, 1.0, 0.0).is_err());
+        assert!(SharedContext::build(&y, &t[..1], 1.0, 0.5).is_err());
+    }
+
+    #[test]
+    fn degenerate_a_detected() {
+        // theta1 exactly 1/lambda1 -> a undefined -> has_a = false.
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let t = vec![0.5; 4];
+        let ctx = SharedContext::build(&y, &t, 2.0, 1.0).unwrap();
+        assert!(!ctx.has_a);
+        assert_eq!(ctx.a_y, 0.0);
+    }
+}

@@ -1,0 +1,373 @@
+//! The screening-rule façade used by the path runner, the coordinator
+//! and the benches.
+
+use super::paper;
+use super::precompute::{FeatureStats, SharedContext};
+use super::variants;
+use crate::data::FeatureMatrix;
+use crate::error::Result;
+
+/// Keep margin: a feature is kept iff `bound ≥ 1 − KEEP_MARGIN`.
+///
+/// The bound is *tight*: for a feature active at λ₂, `|θ₂ᵀf̂| = 1` and the
+/// max over K can equal exactly 1, so rounding (and the O(√gap) error in
+/// a solver-produced θ₁) can push the computed bound a few ulps below 1.
+/// The margin absorbs both; with the default solver tolerance (rel gap
+/// ≤ 1e−6) no violation has ever been observed (T2 audits). Inactive
+/// features' bounds are not clustered near 1, so the screening-power cost
+/// is negligible.
+pub const KEEP_MARGIN: f64 = 1e-6;
+
+/// The keep threshold `1 − KEEP_MARGIN`.
+pub const KEEP_THRESHOLD: f64 = 1.0 - KEEP_MARGIN;
+
+/// Which screening rule to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleKind {
+    /// The paper's full rule (half-space ∩ ball ∩ equality, 3 KKT cases).
+    Paper,
+    /// Ball ∩ equality only (Thm 6.7 unconditionally) — ablation.
+    BallEq,
+    /// Plain Cauchy–Schwarz sphere — weakest safe baseline.
+    Sphere,
+    /// Strong rule — *unsafe* heuristic baseline.
+    Strong,
+    /// Keep everything (no screening).
+    None,
+}
+
+impl RuleKind {
+    /// All safe rules (used by safety sweeps).
+    pub const SAFE: [RuleKind; 3] = [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere];
+
+    /// Parses `"paper" | "ball" | "sphere" | "strong" | "none"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "paper" => Some(RuleKind::Paper),
+            "ball" => Some(RuleKind::BallEq),
+            "sphere" => Some(RuleKind::Sphere),
+            "strong" => Some(RuleKind::Strong),
+            "none" => Some(RuleKind::None),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuleKind::Paper => "paper",
+            RuleKind::BallEq => "ball",
+            RuleKind::Sphere => "sphere",
+            RuleKind::Strong => "strong",
+            RuleKind::None => "none",
+        }
+    }
+
+    /// Whether the rule is guaranteed safe.
+    pub fn is_safe(&self) -> bool {
+        !matches!(self, RuleKind::Strong)
+    }
+}
+
+/// Outcome of screening all m features for one λ₂.
+#[derive(Debug, Clone)]
+pub struct ScreenReport {
+    /// The rule used.
+    pub rule: RuleKind,
+    /// λ₁ (source) and λ₂ (target).
+    pub lambda1: f64,
+    /// Target λ.
+    pub lambda2: f64,
+    /// Per-feature keep decision.
+    pub keep: Vec<bool>,
+    /// Per-feature bound value (`∞` where a rule keeps unconditionally).
+    pub bounds: Vec<f64>,
+    /// Seconds spent screening.
+    pub seconds: f64,
+}
+
+impl ScreenReport {
+    /// Number of screened-out (discarded) features.
+    pub fn n_screened(&self) -> usize {
+        self.keep.iter().filter(|k| !**k).count()
+    }
+
+    /// Fraction of features discarded (the paper's rejection ratio).
+    pub fn rejection_ratio(&self) -> f64 {
+        self.n_screened() as f64 / self.keep.len().max(1) as f64
+    }
+
+    /// Indices of kept features.
+    pub fn kept_indices(&self) -> Vec<usize> {
+        self.keep
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k)
+            .map(|(j, _)| j)
+            .collect()
+    }
+}
+
+/// A screening rule bound to its kind: evaluates one feature.
+pub trait ScreeningRule {
+    /// The rule's kind tag.
+    fn kind(&self) -> RuleKind;
+    /// `true` to keep the feature (bound ≥ [`KEEP_THRESHOLD`]).
+    fn keep(&self, ctx: &SharedContext, s: &FeatureStats) -> bool {
+        self.score(ctx, s) >= KEEP_THRESHOLD
+    }
+    /// The bound/score (≥ 1 ⇔ keep).
+    fn score(&self, ctx: &SharedContext, s: &FeatureStats) -> f64;
+}
+
+/// Unit struct implementing [`ScreeningRule`] per [`RuleKind`].
+#[derive(Debug, Clone, Copy)]
+pub struct Rule(pub RuleKind);
+
+impl ScreeningRule for Rule {
+    fn kind(&self) -> RuleKind {
+        self.0
+    }
+    fn score(&self, ctx: &SharedContext, s: &FeatureStats) -> f64 {
+        match self.0 {
+            RuleKind::Paper => paper::bound(ctx, s),
+            RuleKind::BallEq => variants::ball_eq_bound(ctx, s),
+            RuleKind::Sphere => variants::sphere_bound(ctx, s),
+            RuleKind::Strong => variants::strong_score(ctx, s),
+            RuleKind::None => f64::INFINITY,
+        }
+    }
+}
+
+/// Screens all features of `x` for `lambda2`, given the solved dual point
+/// `(lambda1, theta1)`. This is Algorithm 1 of the paper generalized over
+/// rule variants — the single-threaded reference implementation (the
+/// coordinator has a block-parallel version).
+pub fn screen_all<X: FeatureMatrix>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2: f64,
+) -> Result<ScreenReport> {
+    let t0 = std::time::Instant::now();
+    let m = x.n_features();
+    let mut keep = vec![true; m];
+    let mut bounds = vec![f64::INFINITY; m];
+    if rule != RuleKind::None {
+        let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
+        let r = Rule(rule);
+        for j in 0..m {
+            let s = FeatureStats::compute(x, j, y, &ctx.ytheta1);
+            let score = r.score(&ctx, &s);
+            bounds[j] = score;
+            keep[j] = score >= KEEP_THRESHOLD;
+        }
+    }
+    Ok(ScreenReport {
+        rule,
+        lambda1,
+        lambda2,
+        keep,
+        bounds,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Screens the same features for **several** target λ₂ in one pass over
+/// the data — the stats panel `(f̂ᵀy, f̂ᵀ1, f̂ᵀθ₁, ‖f̂‖²)` is independent
+/// of λ₂, so k targets cost one O(nnz) sweep plus k O(1) bound
+/// evaluations per feature. This is the server batcher's amortization
+/// (§6.4's precompute-sharing taken across requests).
+pub fn screen_multi<X: FeatureMatrix>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2s: &[f64],
+) -> Result<Vec<ScreenReport>> {
+    let t0 = std::time::Instant::now();
+    let m = x.n_features();
+    let k = lambda2s.len();
+    if rule == RuleKind::None || k == 0 {
+        return lambda2s
+            .iter()
+            .map(|&l2| screen_all(rule, x, y, theta1, lambda1, l2))
+            .collect();
+    }
+    let ctxs: Vec<SharedContext> = lambda2s
+        .iter()
+        .map(|&l2| SharedContext::build(y, theta1, lambda1, l2))
+        .collect::<Result<_>>()?;
+    let r = Rule(rule);
+    let mut keeps = vec![vec![true; m]; k];
+    let mut bounds = vec![vec![f64::INFINITY; m]; k];
+    for j in 0..m {
+        // One data pass, shared by all targets (ytheta1 identical per ctx).
+        let s = FeatureStats::compute(x, j, y, &ctxs[0].ytheta1);
+        for (t, ctx) in ctxs.iter().enumerate() {
+            let score = r.score(ctx, &s);
+            bounds[t][j] = score;
+            keeps[t][j] = score >= KEEP_THRESHOLD;
+        }
+    }
+    let seconds = t0.elapsed().as_secs_f64() / k as f64;
+    Ok(lambda2s
+        .iter()
+        .zip(keeps.into_iter().zip(bounds))
+        .map(|(&l2, (keep, bounds))| ScreenReport {
+            rule,
+            lambda1,
+            lambda2: l2,
+            keep,
+            bounds,
+            seconds,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::solver::api::{solve, SolveOptions, SolverKind};
+    use crate::svm::problem::Problem;
+
+    #[test]
+    fn multi_matches_single() {
+        let p = Problem::from_dataset(&SynthSpec::text(40, 100, 105).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        let l2s = [0.9 * l1, 0.6 * l1, 0.3 * l1];
+        let multi =
+            screen_multi(RuleKind::Paper, &p.x, &p.y, &theta1, l1, &l2s).unwrap();
+        for (rep, &l2) in multi.iter().zip(&l2s) {
+            let single =
+                screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, l1, l2).unwrap();
+            assert_eq!(rep.keep, single.keep, "lambda2={l2}");
+            assert_eq!(rep.lambda2, l2);
+        }
+    }
+
+    #[test]
+    fn kinds_parse() {
+        for k in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong, RuleKind::None]
+        {
+            assert_eq!(RuleKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(RuleKind::parse("bogus"), None);
+        assert!(RuleKind::Paper.is_safe());
+        assert!(!RuleKind::Strong.is_safe());
+    }
+
+    #[test]
+    fn none_rule_keeps_everything() {
+        let p = Problem::from_dataset(&SynthSpec::dense(20, 10, 95).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let rep = screen_all(
+            RuleKind::None,
+            &p.x,
+            &p.y,
+            &theta1,
+            p.lambda_max(),
+            0.5 * p.lambda_max(),
+        )
+        .unwrap();
+        assert_eq!(rep.n_screened(), 0);
+        assert_eq!(rep.rejection_ratio(), 0.0);
+        assert_eq!(rep.kept_indices().len(), 10);
+    }
+
+    /// End-to-end SAFETY: for every safe rule and several λ₂, the
+    /// screened-out features must be inactive in the true optimum.
+    #[test]
+    fn safety_end_to_end() {
+        for spec in [
+            SynthSpec::dense(50, 40, 97),
+            SynthSpec::text(60, 120, 98),
+            SynthSpec::corr(40, 30, 99),
+        ] {
+            let p = Problem::from_dataset(&spec.generate());
+            let theta1 = p.theta_at_lambda_max().theta();
+            for frac in [0.95, 0.8, 0.5, 0.2] {
+                let lambda2 = frac * p.lambda_max();
+                let exact = solve(
+                    SolverKind::Cd,
+                    &p.x,
+                    &p.y,
+                    lambda2,
+                    None,
+                    &SolveOptions::precise(),
+                )
+                .unwrap();
+                assert!(exact.converged);
+                for rule in RuleKind::SAFE {
+                    let rep = screen_all(
+                        rule,
+                        &p.x,
+                        &p.y,
+                        &theta1,
+                        p.lambda_max(),
+                        lambda2,
+                    )
+                    .unwrap();
+                    for j in 0..p.m() {
+                        if !rep.keep[j] {
+                            assert!(
+                                exact.w[j].abs() < 1e-7,
+                                "{} rule {} frac {frac}: screened feature {j} \
+                                 is active (w={})",
+                                p.name,
+                                rule.name(),
+                                exact.w[j]
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_screens_at_least_as_much_as_relaxations() {
+        let p = Problem::from_dataset(&SynthSpec::text(60, 200, 101).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l2 = 0.7 * p.lambda_max();
+        let paper =
+            screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, p.lambda_max(), l2).unwrap();
+        let ball =
+            screen_all(RuleKind::BallEq, &p.x, &p.y, &theta1, p.lambda_max(), l2).unwrap();
+        let sphere =
+            screen_all(RuleKind::Sphere, &p.x, &p.y, &theta1, p.lambda_max(), l2).unwrap();
+        assert!(paper.n_screened() >= ball.n_screened());
+        assert!(ball.n_screened() >= sphere.n_screened());
+        // and anything ball keeps, paper decision is consistent per-feature
+        for j in 0..p.m() {
+            if !ball.keep[j] {
+                assert!(!paper.keep[j], "ball screened {j} but paper kept it");
+            }
+        }
+    }
+
+    #[test]
+    fn screening_power_nontrivial_near_lambda_max() {
+        let p = Problem::from_dataset(&SynthSpec::text(80, 300, 103).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let rep = screen_all(
+            RuleKind::Paper,
+            &p.x,
+            &p.y,
+            &theta1,
+            p.lambda_max(),
+            0.9 * p.lambda_max(),
+        )
+        .unwrap();
+        assert!(
+            rep.rejection_ratio() > 0.5,
+            "expected strong screening near lambda_max, got {}",
+            rep.rejection_ratio()
+        );
+    }
+}

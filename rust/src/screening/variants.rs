@@ -1,0 +1,114 @@
+//! Screening-rule variants: ablation baselines and the unsafe heuristic.
+//!
+//! * [`ball_eq_bound`] — the ball ∩ equality bound (Theorem 6.7 applied
+//!   unconditionally). Valid but looser than the full rule: it ignores
+//!   the variational-inequality half-space. This isolates the
+//!   contribution of the half-space (T3 ablation).
+//! * [`sphere_bound`] — the plain Cauchy–Schwarz sphere test
+//!   `|θᵀf̂| ≤ |cᵀf̂| + ‖b‖‖f̂‖`, ignoring both the half-space and the
+//!   `θᵀy = 0` equality — the "static" baseline screening papers compare
+//!   against.
+//! * [`strong_keep`] — the (sequential) strong rule adapted to the SVM
+//!   dual: keep iff `|f̂ᵀθ₁| ≥ 2λ₂/λ₁ − 1`. **Unsafe**: it can discard
+//!   active features; T2 counts its violations.
+
+use super::precompute::{FeatureStats, SharedContext};
+use crate::linalg::proj_null_norm_sq;
+
+/// Ball ∩ equality bound (Thm 6.7 formula used unconditionally):
+/// `max(|θᵀf̂|) ≤ max over ±f̂ of √(‖P_y b‖²‖P_y f̂‖²) − P_y(b)ᵀP_y(f̂) − f̂ᵀθ₁`.
+pub fn ball_eq_bound(ctx: &SharedContext, s: &FeatureStats) -> f64 {
+    let one_side = |s: &FeatureStats| -> f64 {
+        let pyf_sq = proj_null_norm_sq(s.q, s.dy, ctx.ysq);
+        let b_f = ctx.b_f(s);
+        let pyb_pyf = if ctx.ysq > 0.0 { b_f - ctx.b_y * s.dy / ctx.ysq } else { b_f };
+        (ctx.pyb_sq * pyf_sq).sqrt() - pyb_pyf - s.dt
+    };
+    one_side(s).max(one_side(&s.neg()))
+}
+
+/// Plain sphere test: `|θᵀf̂| ≤ |cᵀf̂| + ‖b‖·‖f̂‖` (no half-space, no
+/// equality). The weakest safe bound.
+pub fn sphere_bound(ctx: &SharedContext, s: &FeatureStats) -> f64 {
+    ctx.c_f(s).abs() + (ctx.b_sq * s.q).sqrt()
+}
+
+/// Strong-rule keep decision (unsafe heuristic): keep iff
+/// `|f̂ᵀθ₁| ≥ 2λ₂/λ₁ − 1`.
+///
+/// Derivation: the lasso strong rule assumes the dual correlation
+/// `|f̂ᵀα(λ)|` is 1-Lipschitz in λ; in θ-units at λ₂ that gives the
+/// threshold `2λ₂/λ₁ − 1`.
+pub fn strong_keep(ctx: &SharedContext, s: &FeatureStats) -> bool {
+    let threshold = 2.0 * ctx.lambda2 / ctx.lambda1 - 1.0;
+    s.dt.abs() >= threshold
+}
+
+/// A "bound-like" score for the strong rule so it can share reporting
+/// code: ≥ 1 iff kept.
+pub fn strong_score(ctx: &SharedContext, s: &FeatureStats) -> f64 {
+    let threshold = 2.0 * ctx.lambda2 / ctx.lambda1 - 1.0;
+    if threshold <= 0.0 {
+        // Gap too wide for the heuristic: keep everything.
+        return f64::INFINITY;
+    }
+    s.dt.abs() / threshold
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::screening::paper;
+    use crate::svm::problem::Problem;
+    use crate::testkit::assert_dominates;
+
+    fn setup(frac: f64) -> (Problem, SharedContext) {
+        let p = Problem::from_dataset(&SynthSpec::dense(40, 50, 91).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let ctx =
+            SharedContext::build(&p.y, &theta1, p.lambda_max(), frac * p.lambda_max())
+                .unwrap();
+        (p, ctx)
+    }
+
+    #[test]
+    fn relaxations_are_ordered() {
+        // paper bound <= ball∩eq bound <= sphere bound (superset chain).
+        let (p, ctx) = setup(0.6);
+        for j in 0..p.m() {
+            let s = FeatureStats::compute(&p.x, j, &p.y, &ctx.ytheta1);
+            let full = paper::bound(&ctx, &s);
+            let ball = ball_eq_bound(&ctx, &s);
+            let sphere = sphere_bound(&ctx, &s);
+            assert_dominates(ball, full, 1e-9, &format!("ball >= paper, j={j}"));
+            assert_dominates(sphere, ball, 1e-9, &format!("sphere >= ball, j={j}"));
+        }
+    }
+
+    #[test]
+    fn strong_rule_threshold_behaviour() {
+        let (p, ctx) = setup(0.9);
+        // threshold = 0.8: features with tiny correlation are dropped
+        let mut kept = 0;
+        for j in 0..p.m() {
+            let s = FeatureStats::compute(&p.x, j, &p.y, &ctx.ytheta1);
+            let keep = strong_keep(&ctx, &s);
+            assert_eq!(keep, strong_score(&ctx, &s) >= 1.0);
+            if keep {
+                kept += 1;
+            }
+        }
+        assert!(kept < p.m(), "strong rule should drop something at 0.9·λmax");
+    }
+
+    #[test]
+    fn strong_rule_keeps_all_when_gap_wide() {
+        let (p, ctx) = setup(0.3); // 2*0.3-1 < 0 -> keep all
+        for j in 0..p.m() {
+            let s = FeatureStats::compute(&p.x, j, &p.y, &ctx.ytheta1);
+            assert!(strong_keep(&ctx, &s));
+            assert_eq!(strong_score(&ctx, &s), f64::INFINITY);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Solver-facing API: options, reports and the [`Solver`] trait.
+
+use crate::data::FeatureMatrix;
+use crate::error::Result;
+use crate::svm::dual::GapReport;
+
+/// Convergence and iteration controls shared by all solvers.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOptions {
+    /// Maximum outer iterations (CD epochs / FISTA steps).
+    pub max_iter: usize,
+    /// Target *relative* duality gap (`gap / max(1,|P|)`).
+    pub tol: f64,
+    /// Check the duality gap every this many outer iterations.
+    /// The check is O(nnz), so it is amortized.
+    pub gap_check_every: usize,
+    /// CD only: run this many consecutive active-set-only passes between
+    /// full passes (0 disables the active-set heuristic).
+    pub active_set_passes: usize,
+    /// Record `(iteration, rel_gap)` at every gap check (F4 experiment).
+    pub record_gap_trace: bool,
+    /// CD only: dynamic (gap-ball) screening — at every gap check,
+    /// freeze coordinates the current certificate proves inactive
+    /// ([`crate::screening::gapball`]). Safe; orthogonal to the
+    /// sequential rule (which shrinks the problem *before* the solve).
+    pub dynamic_screen: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            max_iter: 2000,
+            tol: 1e-6,
+            gap_check_every: 10,
+            active_set_passes: 5,
+            record_gap_trace: false,
+            dynamic_screen: false,
+        }
+    }
+}
+
+impl SolveOptions {
+    /// High-precision preset used by safety audits (gap ≤ 1e−9).
+    pub fn precise() -> Self {
+        SolveOptions { max_iter: 20_000, tol: 1e-9, ..Default::default() }
+    }
+}
+
+/// The outcome of one solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// Optimal weights (length m).
+    pub w: Vec<f64>,
+    /// Optimal bias.
+    pub b: f64,
+    /// λ that was solved.
+    pub lambda: f64,
+    /// Outer iterations consumed.
+    pub iterations: usize,
+    /// Final duality-gap certificate.
+    pub gap: GapReport,
+    /// Whether `gap.rel_gap <= tol` was reached within `max_iter`.
+    pub converged: bool,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// `(iteration, rel_gap)` samples (when `record_gap_trace`).
+    pub gap_trace: Vec<(usize, f64)>,
+}
+
+impl SolveReport {
+    /// Indices of active (non-zero) features.
+    pub fn active_set(&self) -> Vec<usize> {
+        self.w
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Number of non-zero weights.
+    pub fn nnz(&self) -> usize {
+        self.w.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+/// A solver for the L1-regularized L2-loss SVM primal.
+pub trait Solver {
+    /// Solves at `lambda`, optionally warm-starting from `w0`.
+    fn solve<X: FeatureMatrix>(
+        &self,
+        x: &X,
+        y: &[f64],
+        lambda: f64,
+        w0: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport>;
+}
+
+/// Which solver implementation to use (enum dispatch — the trait has a
+/// generic method, so it is not object-safe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Cyclic coordinate descent (default).
+    Cd,
+    /// Accelerated proximal gradient.
+    Fista,
+}
+
+impl SolverKind {
+    /// Parses `"cd" | "fista"`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cd" => Some(SolverKind::Cd),
+            "fista" => Some(SolverKind::Fista),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cd => "cd",
+            SolverKind::Fista => "fista",
+        }
+    }
+}
+
+/// Dispatches to the chosen solver.
+pub fn solve<X: FeatureMatrix>(
+    kind: SolverKind,
+    x: &X,
+    y: &[f64],
+    lambda: f64,
+    w0: Option<&[f64]>,
+    opts: &SolveOptions,
+) -> Result<SolveReport> {
+    match kind {
+        SolverKind::Cd => crate::solver::cd::CdSolver::default().solve(x, y, lambda, w0, opts),
+        SolverKind::Fista => {
+            crate::solver::fista::FistaSolver::default().solve(x, y, lambda, w0, opts)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(SolverKind::parse("cd"), Some(SolverKind::Cd));
+        assert_eq!(SolverKind::parse("fista"), Some(SolverKind::Fista));
+        assert_eq!(SolverKind::parse("sgd"), None);
+        assert_eq!(SolverKind::Cd.name(), "cd");
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let o = SolveOptions::default();
+        assert!(o.tol > 0.0 && o.max_iter > 0 && o.gap_check_every > 0);
+        let p = SolveOptions::precise();
+        assert!(p.tol < o.tol);
+    }
+}

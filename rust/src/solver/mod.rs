@@ -1,0 +1,23 @@
+//! Solvers for the L1-regularized L2-loss SVM primal (Eq. 1 / Eq. 23).
+//!
+//! The screening rule is solver-agnostic; we ship two independent
+//! solvers so the experiments can demonstrate that:
+//!
+//! * [`cd`] — cyclic coordinate descent with majorize-minimize proximal
+//!   Newton steps (LIBLINEAR-family), the fast default for sparse data.
+//! * [`fista`] — accelerated proximal gradient with adaptive restart,
+//!   matching the structure of the AOT/PJRT execution path (the gradient
+//!   is one dense panel op, which the L2 JAX graph also implements).
+//!
+//! Both terminate on a *certified* relative duality gap
+//! ([`crate::svm::dual::duality_gap`]), so "solved" always means "provably
+//! within tol of the optimum" — the precision the safety experiments
+//! rely on.
+
+pub mod api;
+pub mod cd;
+pub mod fista;
+pub mod reduced;
+
+pub use api::{solve, SolveOptions, SolveReport, Solver, SolverKind};
+pub use reduced::{scatter_solution, ReducedProblem};

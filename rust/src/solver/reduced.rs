@@ -1,0 +1,124 @@
+//! Reduced (screened) subproblems: extract the kept feature columns,
+//! solve over them, scatter the solution back to full coordinates.
+//!
+//! Safe screening guarantees the discarded features are zero at the
+//! optimum, so `solve(reduced) ⊕ zeros = solve(full)` — exactly the
+//! property the safety tests assert.
+
+use crate::data::{FeatureData, FeatureMatrix};
+use crate::error::{Error, Result};
+use crate::solver::api::{solve, SolveOptions, SolveReport, SolverKind};
+
+/// A subproblem over a subset of feature columns.
+#[derive(Debug, Clone)]
+pub struct ReducedProblem {
+    /// Kept (original) column indices, ascending.
+    pub cols: Vec<usize>,
+    /// Total feature count of the parent problem.
+    pub m_full: usize,
+    /// The extracted feature submatrix.
+    pub x: FeatureData,
+}
+
+impl ReducedProblem {
+    /// Extracts the kept columns from `x`.
+    pub fn build(x: &FeatureData, mut cols: Vec<usize>) -> Result<Self> {
+        let m_full = x.n_features();
+        cols.sort_unstable();
+        cols.dedup();
+        if cols.iter().any(|&j| j >= m_full) {
+            return Err(Error::solver("kept column index out of range"));
+        }
+        let sub = match x {
+            FeatureData::Dense(d) => FeatureData::Dense(d.select_cols(&cols)),
+            FeatureData::Sparse(s) => FeatureData::Sparse(s.select_cols(&cols)),
+        };
+        Ok(ReducedProblem { cols, m_full, x: sub })
+    }
+
+    /// Restricts a full-length warm start to the kept columns.
+    pub fn restrict(&self, w_full: &[f64]) -> Vec<f64> {
+        self.cols.iter().map(|&j| w_full[j]).collect()
+    }
+
+    /// Solves the reduced problem and scatters back to full length.
+    pub fn solve(
+        &self,
+        kind: SolverKind,
+        y: &[f64],
+        lambda: f64,
+        w0_full: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport> {
+        let w0 = w0_full.map(|w| self.restrict(w));
+        let mut rep = solve(kind, &self.x, y, lambda, w0.as_deref(), opts)?;
+        rep.w = scatter_solution(self.m_full, &self.cols, &rep.w);
+        Ok(rep)
+    }
+}
+
+/// Places `w_reduced[k]` at full index `cols[k]`, zeros elsewhere.
+pub fn scatter_solution(m_full: usize, cols: &[usize], w_reduced: &[f64]) -> Vec<f64> {
+    assert_eq!(cols.len(), w_reduced.len());
+    let mut w = vec![0.0; m_full];
+    for (k, &j) in cols.iter().enumerate() {
+        w[j] = w_reduced[k];
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::svm::problem::Problem;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn scatter_roundtrip() {
+        let w = scatter_solution(5, &[1, 3], &[2.0, -1.0]);
+        assert_eq!(w, vec![0.0, 2.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn build_validates_and_dedups() {
+        let ds = SynthSpec::dense(10, 5, 51).generate();
+        assert!(ReducedProblem::build(&ds.x, vec![0, 7]).is_err());
+        let r = ReducedProblem::build(&ds.x, vec![3, 1, 3]).unwrap();
+        assert_eq!(r.cols, vec![1, 3]);
+        assert_eq!(r.x.n_features(), 2);
+    }
+
+    #[test]
+    fn reduced_solve_equals_full_when_dropping_inactive() {
+        // Solve full; drop the provably-inactive columns; reduced solve
+        // must reproduce the same solution (same objective).
+        let ds = SynthSpec::dense(50, 20, 53).generate();
+        let p = Problem::from_dataset(&ds);
+        let lambda = 0.5 * p.lambda_max();
+        let opts = SolveOptions { tol: 1e-9, max_iter: 20000, ..Default::default() };
+        let full = solve(SolverKind::Cd, &p.x, &p.y, lambda, None, &opts).unwrap();
+        assert!(full.converged);
+        // Keep active plus a margin of near-active features.
+        let theta = crate::svm::dual::theta_from_primal(&p.x, &p.y, &full.w, full.b, lambda);
+        let ytheta: Vec<f64> =
+            p.y.iter().zip(&theta).map(|(a, b)| a * b).collect();
+        let keep: Vec<usize> = (0..p.m())
+            .filter(|&j| p.x.col_dot(j, &ytheta).abs() > 0.5)
+            .collect();
+        assert!(keep.len() < 20, "test should actually reduce");
+        let red = ReducedProblem::build(&p.x, keep).unwrap();
+        let r = red.solve(SolverKind::Cd, &p.y, lambda, None, &opts).unwrap();
+        assert!(r.converged);
+        assert_close(r.gap.primal, full.gap.primal, 1e-6, "objective preserved");
+        assert_eq!(r.w.len(), 20);
+    }
+
+    #[test]
+    fn warm_start_restriction() {
+        let ds = SynthSpec::dense(20, 6, 55).generate();
+        let r = ReducedProblem::build(&ds.x, vec![0, 4, 5]).unwrap();
+        let w_full = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(r.restrict(&w_full), vec![1.0, 5.0, 6.0]);
+    }
+}

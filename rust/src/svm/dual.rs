@@ -1,0 +1,224 @@
+//! Primal → dual map (Eq. 20), dual objective and the duality gap.
+//!
+//! From Eq. (13) the dual function is `D(α) = 1ᵀα − ½‖α‖²` subject to
+//! `|f̂_jᵀα| ≤ λ`, `Σ α_i y_i = 0`, `α ≥ 0` (Eq. 18; `θ = α/λ` gives
+//! Eq. 19). Strong duality holds, so for any primal `(w, b)` and any
+//! dual-feasible `α`:
+//!
+//! ```text
+//! gap(w, b, α) = P(w, b) − D(α) ≥ P(w, b) − P(w*, b*) ≥ 0
+//! ```
+//!
+//! which is the solver's *certificate of optimality* and the precision
+//! knob for screening-safety experiments.
+//!
+//! ## Constructing a feasible α from a primal point
+//!
+//! Eq. (20) suggests `α̃ = ξ`. Three constraints must hold:
+//! * `α ≥ 0` — automatic (`ξ` is a max with 0);
+//! * `Σ α_i y_i = 0` — holds **iff the bias is exactly optimal** for the
+//!   current `w` (that is precisely the condition `∂h/∂b = 0`), so this
+//!   module always re-optimizes `b` via [`crate::svm::objective::optimal_bias`]
+//!   before mapping;
+//! * `|f̂_jᵀα| ≤ λ` — enforced by scaling `α = s·α̃` with the *optimal*
+//!   feasible scale `s = clamp(1ᵀα̃/‖α̃‖², 0, λ/max_j|f̂_jᵀα̃|)`, which
+//!   maximizes the concave `D(s·α̃)` over the feasible segment (scaling
+//!   preserves the sign and equality constraints).
+
+use crate::data::FeatureMatrix;
+use crate::svm::objective::{margins, optimal_bias, Margins};
+
+/// A dual-feasible point with its provenance.
+#[derive(Debug, Clone)]
+pub struct DualPoint {
+    /// Dual variables `α` (feasible for the given λ).
+    pub alpha: Vec<f64>,
+    /// The (re-optimized) bias at which `α` was constructed.
+    pub b: f64,
+    /// λ the point is feasible for.
+    pub lambda: f64,
+}
+
+impl DualPoint {
+    /// `θ = α/λ` — the normalized dual variable of Eq. (19).
+    pub fn theta(&self) -> Vec<f64> {
+        self.alpha.iter().map(|a| a / self.lambda).collect()
+    }
+}
+
+/// Gap diagnostics for one primal/dual pair.
+#[derive(Debug, Clone, Copy)]
+pub struct GapReport {
+    /// Primal objective `P(w, b)`.
+    pub primal: f64,
+    /// Dual objective `D(α)` of the constructed feasible point.
+    pub dual: f64,
+    /// `P − D ≥ 0` (clamped at 0 against float noise).
+    pub gap: f64,
+    /// `gap / max(1, |P|)`.
+    pub rel_gap: f64,
+    /// The scaling `s` applied to `α̃ = ξ` (1 ⇒ already feasible).
+    pub scale: f64,
+    /// `max_j |f̂_jᵀ α̃|` before scaling.
+    pub max_corr: f64,
+}
+
+/// Dual objective `D(α) = 1ᵀα − ½‖α‖²`.
+pub fn dual_objective(alpha: &[f64]) -> f64 {
+    let mut s = 0.0;
+    let mut q = 0.0;
+    for &a in alpha {
+        s += a;
+        q += a * a;
+    }
+    s - 0.5 * q
+}
+
+/// The Eq. (20) map: `θ_i = max(0, 1 − y_i(wᵀx_i + b)) / λ`.
+///
+/// This is exact *at the optimum*; away from it the result is a
+/// candidate that [`duality_gap`] makes feasible.
+pub fn theta_from_primal<X: FeatureMatrix>(
+    x: &X,
+    y: &[f64],
+    w: &[f64],
+    b: f64,
+    lambda: f64,
+) -> Vec<f64> {
+    let mar = margins(x, y, w, b);
+    mar.xi.iter().map(|xi| xi / lambda).collect()
+}
+
+/// `max_j |f̂_jᵀ α| = max_j |f_jᵀ (y∘α)|` — the dual-constraint residual.
+pub fn max_abs_correlation<X: FeatureMatrix>(x: &X, y: &[f64], alpha: &[f64]) -> f64 {
+    let ya: Vec<f64> = y.iter().zip(alpha).map(|(yi, ai)| yi * ai).collect();
+    let mut best = 0.0f64;
+    for j in 0..x.n_features() {
+        best = best.max(x.col_dot(j, &ya).abs());
+    }
+    best
+}
+
+/// Computes the duality gap at `w` (bias re-optimized internally).
+///
+/// Returns the gap report, the constructed feasible [`DualPoint`] and the
+/// margins at the re-optimized bias (reusable by the caller).
+pub fn duality_gap<X: FeatureMatrix>(
+    x: &X,
+    y: &[f64],
+    w: &[f64],
+    lambda: f64,
+) -> (GapReport, DualPoint, Margins) {
+    let n = x.n_samples();
+    let mut mar = margins(x, y, w, 0.0);
+    let b = optimal_bias(y, &mar.scores);
+    mar.update_bias(y, b);
+
+    let primal = mar.loss() + lambda * w.iter().map(|v| v.abs()).sum::<f64>();
+
+    // Candidate alpha = xi; optimal feasible scaling.
+    let alpha_tilde = &mar.xi;
+    let sum: f64 = alpha_tilde.iter().sum();
+    let sq: f64 = alpha_tilde.iter().map(|a| a * a).sum();
+    let max_corr = max_abs_correlation(x, y, alpha_tilde);
+    let s_unconstrained = if sq > 0.0 { sum / sq } else { 0.0 };
+    let s_max = if max_corr > lambda { lambda / max_corr } else { 1.0_f64.max(s_unconstrained) };
+    // D(s·α̃) is concave in s; maximize over [0, s_cap] where s_cap keeps
+    // feasibility. When already feasible (max_corr <= λ) we may still
+    // scale up as long as s·max_corr <= λ.
+    let s_cap = if max_corr > 0.0 { lambda / max_corr } else { f64::INFINITY };
+    let s = s_unconstrained.clamp(0.0, s_cap.min(s_max.max(1.0)));
+
+    let alpha: Vec<f64> = alpha_tilde.iter().map(|a| s * a).collect();
+    let dual = dual_objective(&alpha);
+    let gap = (primal - dual).max(0.0);
+    let report = GapReport {
+        primal,
+        dual,
+        gap,
+        rel_gap: gap / primal.abs().max(1.0),
+        scale: s,
+        max_corr,
+    };
+    debug_assert_eq!(alpha.len(), n);
+    (report, DualPoint { alpha, b, lambda }, mar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::svm::lambda_max::lambda_max_stats;
+    use crate::testkit::{assert_close, assert_dominates};
+
+    #[test]
+    fn dual_objective_by_hand() {
+        // D = sum - 0.5*normsq = (1+2) - 0.5*(1+4) = 0.5
+        assert_close(dual_objective(&[1.0, 2.0]), 0.5, 1e-12, "D");
+    }
+
+    #[test]
+    fn gap_zero_at_lambda_max() {
+        // At λ = λ_max the optimum is w = 0, b = b*; the mapped dual point
+        // must certify it: gap(0) == 0 (within float noise).
+        let ds = SynthSpec::dense(60, 20, 2).generate();
+        let s = lambda_max_stats(&ds.x, &ds.y);
+        let w = vec![0.0; 20];
+        let (rep, dp, _) = duality_gap(&ds.x, &ds.y, &w, s.lambda_max);
+        assert!(rep.rel_gap < 1e-9, "rel gap {} at lambda_max", rep.rel_gap);
+        assert_close(dp.b, s.b_star, 1e-9, "bias matches closed form");
+        // theta at lambda_max from Eq.(20): (1 - y b*)/lambda_max
+        let theta = dp.theta();
+        for i in 0..ds.n() {
+            let expect = (1.0 - ds.y[i] * s.b_star).max(0.0) / s.lambda_max;
+            assert_close(theta[i], expect, 1e-9, "theta_i");
+        }
+    }
+
+    #[test]
+    fn gap_nonnegative_and_dual_feasible() {
+        let ds = SynthSpec::text(50, 120, 4).generate();
+        let s = lambda_max_stats(&ds.x, &ds.y);
+        let lambda = 0.5 * s.lambda_max;
+        // an arbitrary (non-optimal) primal point
+        let mut w = vec![0.0; 120];
+        w[3] = 0.2;
+        w[70] = -0.1;
+        let (rep, dp, _) = duality_gap(&ds.x, &ds.y, &w, lambda);
+        assert!(rep.gap >= 0.0);
+        assert_dominates(rep.primal, rep.dual, 1e-9, "P >= D");
+        // feasibility of constructed alpha
+        assert!(dp.alpha.iter().all(|&a| a >= 0.0));
+        let eq: f64 = dp.alpha.iter().zip(&ds.y).map(|(a, y)| a * y).sum();
+        assert!(eq.abs() < 1e-8, "sum alpha y = {eq}");
+        let mc = max_abs_correlation(&ds.x, &ds.y, &dp.alpha);
+        assert!(mc <= lambda * (1.0 + 1e-9), "max corr {mc} > lambda {lambda}");
+    }
+
+    #[test]
+    fn theta_map_matches_margins() {
+        let ds = SynthSpec::dense(30, 10, 6).generate();
+        let w = vec![0.05; 10];
+        let lambda = 1.3;
+        let theta = theta_from_primal(&ds.x, &ds.y, &w, 0.1, lambda);
+        let mar = margins(&ds.x, &ds.y, &w, 0.1);
+        for i in 0..30 {
+            assert_close(theta[i], mar.xi[i] / lambda, 1e-12, "theta=xi/lambda");
+        }
+    }
+
+    #[test]
+    fn scaling_improves_or_keeps_dual_value() {
+        // The chosen scale must be at least as good as the naive
+        // "just make it feasible" scale s = λ / max_corr.
+        let ds = SynthSpec::dense(40, 15, 8).generate();
+        let s = lambda_max_stats(&ds.x, &ds.y);
+        let lambda = 0.9 * s.lambda_max;
+        let w = vec![0.0; 15];
+        let (rep, dp, mar) = duality_gap(&ds.x, &ds.y, &w, lambda);
+        let naive = (lambda / rep.max_corr).min(1.0);
+        let alpha_naive: Vec<f64> = mar.xi.iter().map(|a| naive * a).collect();
+        assert!(rep.dual >= dual_objective(&alpha_naive) - 1e-12);
+        assert_eq!(dp.lambda, lambda);
+    }
+}

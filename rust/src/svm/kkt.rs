@@ -1,0 +1,125 @@
+//! KKT residual checks — the optimality structure of Eq. (21)/(22).
+//!
+//! At the optimum, with `θ = α/λ` (Eq. 19/20):
+//!
+//! ```text
+//! θᵀf̂_j = sign(w_j)      if w_j ≠ 0      (active features)
+//! θᵀf̂_j ∈ [−1, +1]       if w_j = 0      (inactive features)
+//! ```
+//!
+//! The audit quantifies how far a claimed solution is from satisfying
+//! these — used by the safety experiments (a screened feature that turns
+//! out active would show up here as a violation) and by solver tests.
+
+use crate::data::FeatureMatrix;
+
+/// Result of a KKT audit at a claimed optimum.
+#[derive(Debug, Clone)]
+pub struct KktReport {
+    /// `max_j |θᵀf̂_j|` over inactive features (should be ≤ 1).
+    pub max_inactive: f64,
+    /// `max_j | |θᵀf̂_j| − 1 |` over active features (should be 0).
+    pub max_active_dev: f64,
+    /// Active features whose `sign(θᵀf̂_j) ≠ sign(w_j)`.
+    pub sign_violations: usize,
+    /// Inactive features with `|θᵀf̂_j| > 1 + tol`.
+    pub inactive_violations: usize,
+    /// Number of active features.
+    pub n_active: usize,
+    /// Tolerance used.
+    pub tol: f64,
+}
+
+impl KktReport {
+    /// True when no violation exceeded the tolerance.
+    pub fn ok(&self) -> bool {
+        self.sign_violations == 0
+            && self.inactive_violations == 0
+            && self.max_active_dev <= self.tol
+    }
+}
+
+/// Audits `(w, θ)` against Eq. (22). `theta` must be the dual point for
+/// the *same* λ as `w`.
+pub fn kkt_audit<X: FeatureMatrix>(
+    x: &X,
+    y: &[f64],
+    w: &[f64],
+    theta: &[f64],
+    tol: f64,
+) -> KktReport {
+    let ytheta: Vec<f64> = y.iter().zip(theta).map(|(yi, ti)| yi * ti).collect();
+    let mut max_inactive = 0.0f64;
+    let mut max_active_dev = 0.0f64;
+    let mut sign_violations = 0;
+    let mut inactive_violations = 0;
+    let mut n_active = 0;
+    for j in 0..x.n_features() {
+        let corr = x.col_dot(j, &ytheta); // θᵀ f̂_j
+        if w[j] != 0.0 {
+            n_active += 1;
+            max_active_dev = max_active_dev.max((corr.abs() - 1.0).abs());
+            if corr.signum() != w[j].signum() {
+                sign_violations += 1;
+            }
+        } else {
+            max_inactive = max_inactive.max(corr.abs());
+            if corr.abs() > 1.0 + tol {
+                inactive_violations += 1;
+            }
+        }
+    }
+    KktReport {
+        max_inactive,
+        max_active_dev,
+        sign_violations,
+        inactive_violations,
+        n_active,
+        tol,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    #[test]
+    fn clean_point_passes() {
+        // Construct a consistent toy: f0 with theta^T fhat_0 = 1 (active,
+        // w_0 > 0), f1 with small correlation (inactive).
+        let y = vec![1.0, -1.0];
+        let theta = vec![0.5, 0.5];
+        // ytheta = [0.5, -0.5]; want f0 . ytheta = 1 -> f0 = [1, -1]
+        let x = DenseMatrix::from_cols(2, vec![vec![1.0, -1.0], vec![0.4, 0.4]]);
+        let w = vec![2.0, 0.0];
+        let rep = kkt_audit(&x, &y, &w, &theta, 1e-9);
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.n_active, 1);
+        assert!(rep.max_inactive <= 0.01);
+    }
+
+    #[test]
+    fn detects_sign_violation() {
+        let y = vec![1.0, -1.0];
+        let theta = vec![0.5, 0.5];
+        let x = DenseMatrix::from_cols(2, vec![vec![1.0, -1.0]]);
+        let w = vec![-2.0]; // wrong sign vs corr = +1
+        let rep = kkt_audit(&x, &y, &w, &theta, 1e-9);
+        assert_eq!(rep.sign_violations, 1);
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn detects_inactive_violation() {
+        let y = vec![1.0, -1.0];
+        let theta = vec![1.0, 1.0];
+        // corr = f.(y∘theta) = [1,-1].[1,-1] = 2 > 1, but w = 0
+        let x = DenseMatrix::from_cols(2, vec![vec![1.0, -1.0]]);
+        let w = vec![0.0];
+        let rep = kkt_audit(&x, &y, &w, &theta, 1e-6);
+        assert_eq!(rep.inactive_violations, 1);
+        assert!(rep.max_inactive > 1.0);
+        assert!(!rep.ok());
+    }
+}

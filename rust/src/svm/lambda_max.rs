@@ -1,0 +1,105 @@
+//! Closed-form `λ_max` (Eq. 26) and the first feature(s) to enter the
+//! model (§5 of the paper).
+//!
+//! At `w = 0` the optimal bias is `b* = (n₊ − n₋)/n` and
+//!
+//! ```text
+//! λ_max = ‖ Σ_i (y_i − b*) x_i ‖_∞ = ‖ Xᵀ(y − b*·1) ‖_∞
+//! ```
+//!
+//! The vector inside the norm, `m = Xᵀ(y − b*1)`, also identifies the
+//! first feature(s) to become active as λ drops below `λ_max`: those
+//! attaining the max magnitude.
+
+use crate::data::FeatureMatrix;
+
+/// Everything derived from the closed-form λ_max computation.
+#[derive(Debug, Clone)]
+pub struct LambdaMaxStats {
+    /// The smallest λ with all-zero solution (Eq. 26).
+    pub lambda_max: f64,
+    /// Optimal bias at w = 0: `(n₊ − n₋)/n`.
+    pub b_star: f64,
+    /// The correlation vector `m_j = f_jᵀ(y − b*1)`.
+    pub m_vec: Vec<f64>,
+    /// Features attaining `|m_j| = λ_max` within `tol` — the first
+    /// feature(s) to enter the model (§5).
+    pub first_features: Vec<usize>,
+}
+
+/// Computes [`LambdaMaxStats`] in one pass over the columns (O(nnz)).
+pub fn lambda_max_stats<X: FeatureMatrix>(x: &X, y: &[f64]) -> LambdaMaxStats {
+    let n = x.n_samples();
+    assert_eq!(y.len(), n, "label length");
+    let n_pos = y.iter().filter(|v| **v > 0.0).count() as f64;
+    let n_neg = n as f64 - n_pos;
+    let b_star = (n_pos - n_neg) / n as f64;
+    // residual r = y - b*·1
+    let r: Vec<f64> = y.iter().map(|yi| yi - b_star).collect();
+    let mut m_vec = vec![0.0; x.n_features()];
+    x.matvec_t(&r, &mut m_vec);
+    let lambda_max = m_vec.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+    let tol = 1e-12 * (1.0 + lambda_max);
+    let first_features = m_vec
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| (v.abs() - lambda_max).abs() <= tol)
+        .map(|(j, _)| j)
+        .collect();
+    LambdaMaxStats { lambda_max, b_star, m_vec, first_features }
+}
+
+/// Convenience: just the first features (§5).
+pub fn first_features<X: FeatureMatrix>(x: &X, y: &[f64]) -> Vec<usize> {
+    lambda_max_stats(x, y).first_features
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+    use crate::data::synth::SynthSpec;
+    use crate::data::FeatureData;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn balanced_labels_zero_bias() {
+        // y balanced -> b* = 0, m_j = f_j.y
+        let x = DenseMatrix::from_cols(
+            4,
+            vec![vec![1.0, 1.0, -1.0, -1.0], vec![0.5, -0.5, 0.5, -0.5]],
+        );
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let s = lambda_max_stats(&x, &y);
+        assert_eq!(s.b_star, 0.0);
+        // m0 = 1-1-1+1 = 0 ; m1 = 0.5+0.5+0.5+0.5 = 2
+        assert_close(s.m_vec[0], 0.0, 1e-12, "m0");
+        assert_close(s.m_vec[1], 2.0, 1e-12, "m1");
+        assert_close(s.lambda_max, 2.0, 1e-12, "lambda_max");
+        assert_eq!(s.first_features, vec![1]);
+    }
+
+    #[test]
+    fn unbalanced_bias() {
+        let x = DenseMatrix::from_cols(3, vec![vec![1.0, 2.0, 3.0]]);
+        let y = vec![1.0, 1.0, -1.0];
+        let s = lambda_max_stats(&FeatureData::Dense(x), &y);
+        assert_close(s.b_star, 1.0 / 3.0, 1e-12, "b*");
+        // m = (1-1/3)*1 + (1-1/3)*2 + (-1-1/3)*3 = 2/3 + 4/3 - 4 = -2
+        assert_close(s.m_vec[0], -2.0, 1e-12, "m");
+        assert_close(s.lambda_max, 2.0, 1e-12, "lambda_max");
+    }
+
+    #[test]
+    fn consistent_on_synthetic_sparse() {
+        let ds = SynthSpec::text(80, 300, 21).generate();
+        let s = lambda_max_stats(&ds.x, &ds.y);
+        assert!(s.lambda_max > 0.0);
+        assert!(!s.first_features.is_empty());
+        // first features attain the max
+        for &j in &s.first_features {
+            assert_close(s.m_vec[j].abs(), s.lambda_max, 1e-9, "attains max");
+        }
+        assert_eq!(first_features(&ds.x, &ds.y), s.first_features);
+    }
+}

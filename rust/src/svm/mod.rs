@@ -1,0 +1,22 @@
+//! SVM core: the L1-regularized L2-loss SVM of the paper.
+//!
+//! * [`problem`] — the [`problem::Problem`] container binding data to the
+//!   model, with cached `λ_max` (Eq. 26) and the dual point at `λ_max`.
+//! * [`objective`] — primal objective `h(w,b) + λ‖w‖₁` (Eq. 23) and its
+//!   gradient (Eq. 24–25), plus the exact unpenalized-bias step.
+//! * [`lambda_max`] — closed-form `λ_max` (Eq. 26) and the first
+//!   feature(s) to enter the model (§5).
+//! * [`dual`] — the primal→dual map (Eq. 20), dual feasibility scaling,
+//!   and the duality gap used as the solver's certificate of optimality.
+//! * [`kkt`] — KKT residual checks (Eq. 21–22) used by safety audits.
+
+pub mod dual;
+pub mod kkt;
+pub mod lambda_max;
+pub mod objective;
+pub mod problem;
+
+pub use dual::{dual_objective, duality_gap, theta_from_primal, DualPoint};
+pub use lambda_max::{first_features, lambda_max_stats, LambdaMaxStats};
+pub use objective::{margins, optimal_bias, primal_gradient, primal_objective, Margins};
+pub use problem::Problem;

@@ -1,0 +1,113 @@
+//! The [`Problem`] container: a dataset bound to the sparse-SVM model,
+//! with the λ_max statistics cached.
+
+use crate::data::dataset::Dataset;
+use crate::data::{FeatureData, FeatureMatrix};
+use crate::svm::dual::DualPoint;
+use crate::svm::lambda_max::{lambda_max_stats, LambdaMaxStats};
+
+/// A sparse-SVM training problem: features, labels and the cached
+/// closed-form quantities of §4/§5 of the paper.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Feature matrix (n × m).
+    pub x: FeatureData,
+    /// Labels (±1).
+    pub y: Vec<f64>,
+    /// Dataset name (for reports).
+    pub name: String,
+    lm: LambdaMaxStats,
+}
+
+impl Problem {
+    /// Binds a dataset (cheap clone of labels; features are moved).
+    pub fn new(name: impl Into<String>, x: FeatureData, y: Vec<f64>) -> Self {
+        let lm = lambda_max_stats(&x, &y);
+        Problem { x, y, name: name.into(), lm }
+    }
+
+    /// Builds from a [`Dataset`] by cloning its storage.
+    pub fn from_dataset(ds: &Dataset) -> Self {
+        Problem::new(ds.name.clone(), ds.x.clone(), ds.y.clone())
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.x.n_samples()
+    }
+
+    /// Number of features.
+    pub fn m(&self) -> usize {
+        self.x.n_features()
+    }
+
+    /// The smallest λ with all-zero solution (Eq. 26).
+    pub fn lambda_max(&self) -> f64 {
+        self.lm.lambda_max
+    }
+
+    /// Optimal bias at `w = 0`.
+    pub fn b_star(&self) -> f64 {
+        self.lm.b_star
+    }
+
+    /// Full λ_max statistics (correlation vector, first features).
+    pub fn lambda_max_stats(&self) -> &LambdaMaxStats {
+        &self.lm
+    }
+
+    /// The exact dual point at `λ = λ_max` (footnote 1 of the paper):
+    /// `θ_i = (1 − y_i b*)/λ_max`, which is ≥ 0 because `b* ∈ [−1, 1]`.
+    pub fn theta_at_lambda_max(&self) -> DualPoint {
+        let lam = self.lm.lambda_max;
+        let alpha: Vec<f64> = self
+            .y
+            .iter()
+            .map(|yi| (1.0 - yi * self.lm.b_star).max(0.0))
+            .collect();
+        DualPoint { alpha, b: self.lm.b_star, lambda: lam }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::svm::dual::max_abs_correlation;
+    use crate::testkit::assert_close;
+
+    #[test]
+    fn cached_stats_match_direct() {
+        let ds = SynthSpec::dense(40, 12, 10).generate();
+        let p = Problem::from_dataset(&ds);
+        let direct = lambda_max_stats(&p.x, &p.y);
+        assert_eq!(p.lambda_max(), direct.lambda_max);
+        assert_eq!(p.b_star(), direct.b_star);
+        assert_eq!(p.n(), 40);
+        assert_eq!(p.m(), 12);
+        assert!(p.name.contains("synth-dense"));
+    }
+
+    #[test]
+    fn theta_at_lambda_max_is_dual_feasible() {
+        let ds = SynthSpec::text(60, 150, 12).generate();
+        let p = Problem::from_dataset(&ds);
+        let dp = p.theta_at_lambda_max();
+        // alpha >= 0
+        assert!(dp.alpha.iter().all(|&a| a >= 0.0));
+        // equality constraint
+        let eq: f64 = dp.alpha.iter().zip(&p.y).map(|(a, y)| a * y).sum();
+        assert!(eq.abs() < 1e-9, "sum alpha y = {eq}");
+        // |fhat' alpha| <= lambda_max with equality attained at the first feature
+        let mc = max_abs_correlation(&p.x, &p.y, &dp.alpha);
+        assert_close(mc, p.lambda_max(), 1e-9, "max corr == lambda_max");
+        // theta scaling
+        let theta = dp.theta();
+        assert_close(
+            theta[0] * p.lambda_max(),
+            dp.alpha[0],
+            1e-12,
+            "theta = alpha/lambda",
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! In-house property-testing harness (the vendored crate set has no
+//! `proptest`).
+//!
+//! [`property`] runs a closure over `cases` seeded inputs; on failure it
+//! reports the failing seed so the case reproduces exactly (every
+//! generator in this crate is a pure function of its seed). This covers
+//! the coordinator/screening invariants DESIGN.md §5 lists.
+
+use crate::data::synth::Pcg32;
+
+/// Runs `body(case_rng)` for `cases` deterministic cases derived from
+/// `seed`. Panics with the failing case seed embedded in the message.
+pub fn property<F: FnMut(&mut Pcg32)>(name: &str, seed: u64, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Asserts two floats agree to a relative-or-absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "{what}: {a} vs {b} (diff {:.3e}, tol {tol:.1e})",
+        (a - b).abs()
+    );
+}
+
+/// Asserts `lo <= x` with tolerance — used for "bound must dominate"
+/// safety properties.
+#[track_caller]
+pub fn assert_dominates(bound: f64, value: f64, tol: f64, what: &str) {
+    assert!(
+        bound >= value - tol * (1.0 + value.abs()),
+        "{what}: bound {bound} < value {value} (violation {:.3e})",
+        value - bound
+    );
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn uniform(rng: &mut Pcg32, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("count", 1, 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn property_reports_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            property("boom", 2, 10, |rng| {
+                // fail deterministically on some case
+                assert!(rng.f64() < 0.95, "drew a large value");
+            })
+        });
+        let err = r.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("case_seed="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn close_and_dominates() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, "eq");
+        assert_dominates(2.0, 1.5, 1e-9, "dom");
+        assert_dominates(1.5, 1.5 + 1e-12, 1e-9, "edge");
+    }
+
+    #[test]
+    #[should_panic]
+    fn dominates_detects_violation() {
+        assert_dominates(1.0, 2.0, 1e-9, "viol");
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..100 {
+            let v = uniform(&mut rng, -2.0, 5.0);
+            assert!((-2.0..5.0).contains(&v));
+        }
+    }
+}

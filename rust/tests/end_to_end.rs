@@ -1,0 +1,158 @@
+//! Cross-module integration: full paths, safety sweeps, warm starts and
+//! the reduced-problem equivalence — the system-level guarantees.
+
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::screening::rule::RuleKind;
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+use svmscreen::svm::problem::Problem;
+
+/// The contract of safe screening: identical path objectives for every
+/// safe rule, on every dataset family, with both solvers.
+#[test]
+fn all_safe_rules_preserve_the_path() {
+    let specs = [
+        SynthSpec::dense(60, 50, 401),
+        SynthSpec::text(80, 200, 402),
+        SynthSpec::corr(50, 40, 403),
+    ];
+    for spec in specs {
+        let p = Problem::from_dataset(&spec.generate());
+        let grid = geometric(p.lambda_max(), 0.1, 6);
+        let opts = SolveOptions { tol: 1e-8, max_iter: 30000, ..Default::default() };
+        let baseline = run_path(
+            &p,
+            &grid,
+            &PathConfig { rule: RuleKind::None, solve: opts, ..Default::default() },
+        )
+        .unwrap();
+        for rule in RuleKind::SAFE {
+            let run = run_path(
+                &p,
+                &grid,
+                &PathConfig { rule, solve: opts, ..Default::default() },
+            )
+            .unwrap();
+            for k in 0..grid.len() {
+                let o_base = svmscreen::svm::objective::primal_objective(
+                    &p.x,
+                    &p.y,
+                    &baseline.weights[k],
+                    baseline.biases[k],
+                    grid[k],
+                );
+                let o_rule = svmscreen::svm::objective::primal_objective(
+                    &p.x,
+                    &p.y,
+                    &run.weights[k],
+                    run.biases[k],
+                    grid[k],
+                );
+                let dev = (o_base - o_rule).abs() / o_base.max(1e-12);
+                assert!(
+                    dev < 1e-5,
+                    "{} rule {} step {k}: objective dev {dev}",
+                    p.name,
+                    rule.name()
+                );
+            }
+        }
+    }
+}
+
+/// Screening power ordering along a real path: paper >= ball >= sphere.
+#[test]
+fn rule_power_ordering_holds_on_paths() {
+    let p = Problem::from_dataset(&SynthSpec::text(80, 300, 405).generate());
+    let grid = geometric(p.lambda_max(), 0.1, 8);
+    let mut rejections = Vec::new();
+    for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere] {
+        let run =
+            run_path(&p, &grid, &PathConfig { rule, ..Default::default() }).unwrap();
+        rejections.push(run.totals().mean_rejection);
+    }
+    assert!(
+        rejections[0] >= rejections[1] - 1e-12,
+        "paper {} < ball {}",
+        rejections[0],
+        rejections[1]
+    );
+    assert!(
+        rejections[1] >= rejections[2] - 1e-12,
+        "ball {} < sphere {}",
+        rejections[1],
+        rejections[2]
+    );
+}
+
+/// Both solvers agree along a screened path.
+#[test]
+fn solvers_agree_on_screened_path() {
+    let p = Problem::from_dataset(&SynthSpec::dense(60, 40, 407).generate());
+    let grid = geometric(p.lambda_max(), 0.2, 5);
+    let opts = SolveOptions { tol: 1e-7, max_iter: 50000, ..Default::default() };
+    let cd = run_path(
+        &p,
+        &grid,
+        &PathConfig { solver: SolverKind::Cd, solve: opts, ..Default::default() },
+    )
+    .unwrap();
+    let fista = run_path(
+        &p,
+        &grid,
+        &PathConfig { solver: SolverKind::Fista, solve: opts, ..Default::default() },
+    )
+    .unwrap();
+    for k in 0..grid.len() {
+        let o1 = svmscreen::svm::objective::primal_objective(
+            &p.x, &p.y, &cd.weights[k], cd.biases[k], grid[k],
+        );
+        let o2 = svmscreen::svm::objective::primal_objective(
+            &p.x, &p.y, &fista.weights[k], fista.biases[k], grid[k],
+        );
+        assert!((o1 - o2).abs() / o1.max(1e-12) < 1e-4, "step {k}: {o1} vs {o2}");
+    }
+}
+
+/// Sparsity is monotone-ish along the path and the active sets grow.
+#[test]
+fn path_active_sets_grow_sensibly() {
+    let p = Problem::from_dataset(&SynthSpec::text(100, 400, 409).generate());
+    let grid = geometric(p.lambda_max(), 0.05, 10);
+    let run = run_path(&p, &grid, &PathConfig::default()).unwrap();
+    let first_nnz = run.steps.first().unwrap().nnz;
+    let last_nnz = run.steps.last().unwrap().nnz;
+    assert!(first_nnz < last_nnz, "nnz {first_nnz} -> {last_nnz}");
+    // kept never drops below nnz (safe screening keeps all active).
+    for s in &run.steps {
+        assert!(s.kept >= s.nnz, "kept {} < nnz {}", s.kept, s.nnz);
+    }
+}
+
+/// Recovery sanity on planted data: with enough signal the path finds
+/// mostly-true features at moderate lambda.
+#[test]
+fn planted_support_partially_recovered() {
+    let ds = SynthSpec::dense(200, 50, 411).generate();
+    let truth: std::collections::HashSet<usize> =
+        ds.true_support.clone().unwrap().into_iter().collect();
+    let p = Problem::from_dataset(&ds);
+    let rep = solve(
+        SolverKind::Cd,
+        &p.x,
+        &p.y,
+        0.2 * p.lambda_max(),
+        None,
+        &SolveOptions::default(),
+    )
+    .unwrap();
+    let active = rep.active_set();
+    let hits = active.iter().filter(|j| truth.contains(j)).count();
+    assert!(
+        hits * 2 >= truth.len(),
+        "recovered only {hits} of {} planted features (active: {})",
+        truth.len(),
+        active.len()
+    );
+}

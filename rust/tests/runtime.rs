@@ -1,0 +1,152 @@
+//! Integration: the PJRT (AOT) execution path vs the native rust
+//! implementations. Requires `make artifacts` (skips gracefully if the
+//! artifact dir is absent so `cargo test` works on a fresh checkout).
+
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::data::FeatureMatrix;
+use svmscreen::runtime::{screen_all_pjrt, PjrtEngine, PjrtScreenOptions};
+use svmscreen::screening::rule::{screen_all, RuleKind};
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+use svmscreen::svm::problem::Problem;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = PjrtEngine::default_dir();
+    if !dir.exists() {
+        eprintln!("skipping: artifact dir {dir:?} missing (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load(dir).expect("engine load"))
+}
+
+#[test]
+fn engine_discovers_artifacts() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.screen_exe_for(100).is_some(), "{engine:?}");
+    assert!(engine.screen_exe_for(1000).is_some());
+    assert!(engine.screen_exe_for(100_000).is_none());
+    assert!(engine.grad_exe_for(200, 400).is_some());
+}
+
+#[test]
+fn pjrt_screening_matches_native_decisions() {
+    let Some(engine) = engine() else { return };
+    for spec in [SynthSpec::dense(120, 300, 301), SynthSpec::text(200, 600, 302)] {
+        let p = Problem::from_dataset(&spec.generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        for frac in [0.9, 0.6, 0.3] {
+            let l2 = frac * l1;
+            let native = screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, l1, l2).unwrap();
+            let pjrt = screen_all_pjrt(
+                &engine,
+                &p.x,
+                &p.y,
+                &theta1,
+                l1,
+                l2,
+                &PjrtScreenOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(pjrt.keep.len(), native.keep.len());
+            // Bounds agree to f32 accuracy.
+            let mut max_dev = 0.0f64;
+            for j in 0..p.m() {
+                let d = (pjrt.bounds[j] - native.bounds[j]).abs()
+                    / (1.0 + native.bounds[j].abs());
+                max_dev = max_dev.max(d);
+            }
+            assert!(max_dev < 1e-3, "{} frac={frac}: max dev {max_dev}", p.name);
+            // Decisions: pjrt (with keep margin) must keep a superset of
+            // what native keeps minus borderline cases; exact agreement
+            // away from the threshold.
+            for j in 0..p.m() {
+                if (native.bounds[j] - 1.0).abs() > 5e-3 {
+                    assert_eq!(
+                        pjrt.keep[j], native.keep[j],
+                        "{} frac={frac} feature {j}: bound {}",
+                        p.name, native.bounds[j]
+                    );
+                }
+                if native.keep[j] {
+                    assert!(pjrt.keep[j], "pjrt dropped a native-kept feature");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_screening_is_safe_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let p = Problem::from_dataset(&SynthSpec::text(150, 400, 303).generate());
+    let theta1 = p.theta_at_lambda_max().theta();
+    let l1 = p.lambda_max();
+    let l2 = 0.5 * l1;
+    let rep = screen_all_pjrt(
+        &engine,
+        &p.x,
+        &p.y,
+        &theta1,
+        l1,
+        l2,
+        &PjrtScreenOptions::default(),
+    )
+    .unwrap();
+    let exact = solve(SolverKind::Cd, &p.x, &p.y, l2, None, &SolveOptions::precise()).unwrap();
+    assert!(exact.converged);
+    for j in 0..p.m() {
+        if !rep.keep[j] {
+            assert!(
+                exact.w[j].abs() < 1e-7,
+                "pjrt screened active feature {j} (w = {})",
+                exact.w[j]
+            );
+        }
+    }
+    assert!(rep.n_screened() > 0, "screening should fire");
+}
+
+#[test]
+fn pjrt_grad_matches_native() {
+    let Some(engine) = engine() else { return };
+    let ds = SynthSpec::dense(200, 400, 304).generate();
+    let exe = engine.grad_exe_for(200, 400).expect("grad artifact");
+    let (n_pad, m_pad) = (exe.n, exe.m);
+    // Pack x row-major (n_pad, m_pad), f32.
+    let mut x = vec![0.0f32; n_pad * m_pad];
+    for j in 0..400 {
+        ds.x.col_visit(j, &mut |i, v| x[i * m_pad + j] = v as f32);
+    }
+    let mut y = vec![0.0f32; n_pad];
+    for i in 0..200 {
+        y[i] = ds.y[i] as f32;
+    }
+    // Padded samples have y=0 -> xi = max(1-0,0) = 1 contributes to loss
+    // and gb! Guard: padded y=0 gives xi=1, u=0 (xi*y=0) so gw/gb are
+    // unaffected; loss is offset by a constant 0.5*pad. Account for it.
+    let mut w = vec![0.0f32; m_pad];
+    let mut rng = svmscreen::data::synth::Pcg32::seeded(305);
+    for j in 0..400 {
+        w[j] = (0.1 * rng.gaussian()) as f32;
+    }
+    let b = 0.15f32;
+    let (gw, gb, loss) = exe.run(&x, &y, &w, b).unwrap();
+
+    let w64: Vec<f64> = w[..400].iter().map(|v| *v as f64).collect();
+    let mar = svmscreen::svm::objective::margins(&ds.x, &ds.y, &w64, b as f64);
+    let (gw_native, gb_native) =
+        svmscreen::svm::objective::primal_gradient(&ds.x, &ds.y, &mar);
+    for j in 0..400 {
+        let d = (gw[j] as f64 - gw_native[j]).abs() / (1.0 + gw_native[j].abs());
+        assert!(d < 1e-4, "gw[{j}]: {} vs {}", gw[j], gw_native[j]);
+    }
+    assert!((gb as f64 - gb_native).abs() / (1.0 + gb_native.abs()) < 1e-4);
+    let pad_offset = 0.5 * (n_pad - 200) as f64; // padded rows: xi=1 each
+    assert!(
+        ((loss as f64 - pad_offset) - mar.loss()).abs() / (1.0 + mar.loss()) < 1e-4,
+        "loss {} (pad-adjusted {}) vs {}",
+        loss,
+        loss as f64 - pad_offset,
+        mar.loss()
+    );
+}

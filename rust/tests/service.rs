@@ -1,0 +1,123 @@
+//! Integration: the screening service under concurrent load, exercising
+//! the accept loop, handler pool, batcher and shutdown path together.
+
+use std::time::Duration;
+use svmscreen::coordinator::batcher::BatchPolicy;
+use svmscreen::coordinator::protocol::Json;
+use svmscreen::coordinator::server::{Client, ScreeningServer, ServerConfig};
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::svm::problem::Problem;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::obj(pairs)
+}
+
+#[test]
+fn full_session_lifecycle() {
+    let p = Problem::from_dataset(&SynthSpec::text(80, 250, 501).generate());
+    let lmax = p.lambda_max();
+    let server = ScreeningServer::start(p, ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+
+    // info -> solve -> screen at progressively smaller lambda
+    let info = c.request(&obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+    assert_eq!(info.get("lambda1").unwrap().as_f64(), Some(lmax));
+
+    let sol = c
+        .request(&obj(vec![
+            ("cmd", Json::Str("solve".into())),
+            ("lambda", Json::Num(0.5 * lmax)),
+        ]))
+        .unwrap();
+    assert_eq!(sol.get("ok"), Some(&Json::Bool(true)), "{sol:?}");
+
+    let mut prev_rejection = 1.0;
+    for frac in [0.95, 0.7, 0.4] {
+        let rep = c
+            .request(&obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(frac * 0.5 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let rej = rep.get("rejection").unwrap().as_f64().unwrap();
+        assert!(rej <= prev_rejection + 1e-9, "rejection should shrink with gap");
+        prev_rejection = rej;
+    }
+    server.shutdown();
+}
+
+#[test]
+fn many_concurrent_clients_under_small_batches() {
+    let p = Problem::from_dataset(&SynthSpec::text(60, 300, 503).generate());
+    let lmax = p.lambda_max();
+    let server = ScreeningServer::start(
+        p,
+        ServerConfig {
+            workers: 8,
+            batch: BatchPolicy { max_batch: 4, window: Duration::from_millis(10) },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..10)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                for s in 0..5 {
+                    let frac = 0.9 - 0.02 * (k as f64) - 0.1 * (s as f64);
+                    let rep = c
+                        .request(&obj(vec![
+                            ("cmd", Json::Str("screen".into())),
+                            ("lambda2", Json::Num(frac.max(0.05) * lmax)),
+                        ]))
+                        .unwrap();
+                    assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (screens, batches, _) = server.metrics();
+    assert_eq!(screens, 50);
+    assert!(batches <= 50, "batching should have merged some requests");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_with_idle_connection_does_not_hang() {
+    let p = Problem::from_dataset(&SynthSpec::dense(30, 20, 505).generate());
+    let server = ScreeningServer::start(p, ServerConfig::default()).unwrap();
+    // Open a connection and never send anything.
+    let _idle = std::net::TcpStream::connect(server.addr).unwrap();
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown hung: {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn protocol_robustness_over_the_wire() {
+    use std::io::{BufRead, BufReader, Write};
+    let p = Problem::from_dataset(&SynthSpec::dense(30, 20, 507).generate());
+    let server = ScreeningServer::start(p, ServerConfig::default()).unwrap();
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    // Garbage line -> error response, connection stays usable.
+    writeln!(w, "this is not json").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    line.clear();
+    writeln!(w, "{{\"cmd\":\"ping\"}}").unwrap();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"pong\":true"), "{line}");
+    server.shutdown();
+}
