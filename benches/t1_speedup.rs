@@ -71,4 +71,11 @@ fn main() {
         &["dataset", "solver", "rule", "total_s", "screen_s", "mean_rejection", "violations", "speedup"],
         &csv,
     );
+    // Machine-readable artifact: the full telemetry snapshot of the run
+    // (path/solver/screening counters, latency percentiles).
+    let snapshot = svmscreen::telemetry::global().snapshot().to_json().encode();
+    match std::fs::write("BENCH_t1.json", &snapshot) {
+        Ok(()) => println!("wrote BENCH_t1.json ({} bytes)", snapshot.len()),
+        Err(e) => eprintln!("BENCH_t1.json not written: {e}"),
+    }
 }

@@ -99,6 +99,37 @@ fn main() -> Result<()> {
         "throughput: {:.0} screen requests/s",
         screens as f64 / wall
     );
+
+    // Live stats over the wire: the server's own view of the workload
+    // (request counters, latency percentiles, batch coalescing).
+    let stats = c.request(&Json::obj(vec![
+        ("cmd", Json::Str("stats".into())),
+        ("prometheus", Json::Bool(true)),
+    ]))?;
+    let metrics = stats.get("metrics").expect("stats.metrics");
+    let requests = metrics
+        .get("counters")
+        .and_then(|c| c.get("server.requests"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let p99 = metrics
+        .get("histograms")
+        .and_then(|h| h.get("server.screen.seconds"))
+        .and_then(|h| h.get("p99"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(f64::NAN);
+    println!("server-side stats: {requests} requests, screen p99 {p99:.4}s");
+    if let Some(text) = stats.get("prometheus").and_then(|v| v.as_str()) {
+        let preview: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("server_"))
+            .take(6)
+            .collect();
+        println!("prometheus rendering (server_* excerpt):");
+        for line in preview {
+            println!("  {line}");
+        }
+    }
     server.shutdown();
     Ok(())
 }

@@ -77,6 +77,11 @@ COMMANDS:
   help      this text
 
 Config file: --config FILE (key = value lines; CLI flags override).
+
+ENVIRONMENT:
+  PALLAS_LOG       stderr log level: error|warn|info|debug|trace|off
+                   (default warn); debug traces spans, solves, screens
+  PALLAS_LOG_JSON  path to a JSONL event sink (structured telemetry)
 ";
 
 #[cfg(test)]

@@ -17,10 +17,23 @@
 //! | `{"cmd":"solve","lambda":x}` | solves at `x`, updates the dual point |
 //! | `{"cmd":"screen","lambda2":x}` | batched screening vs the current point |
 //! | `{"cmd":"screen","lambda2":x,"indices":true}` | … plus kept indices |
+//! | `{"cmd":"stats"}` | live telemetry snapshot: request counters, latency percentiles, batching stats |
+//! | `{"cmd":"stats","prometheus":true}` | … plus a Prometheus text rendering under `"prometheus"` |
 //! | `{"cmd":"quit"}` | closes the connection |
 //!
 //! Every response carries `"ok"`; errors come back as
 //! `{"ok":false,"error":"..."}`.
+//!
+//! ## Telemetry
+//!
+//! Every request is timed into the global registry
+//! ([`crate::telemetry`]): latency histograms `server.screen.seconds`
+//! / `server.solve.seconds` / `server.request.seconds`, counters
+//! `server.requests` / `server.connections`, and batch-coalescing
+//! stats `server.batches` / `server.batch.coalesced` plus the
+//! `server.batch.size` histogram. `{"cmd":"stats"}` exposes all of it
+//! over the wire; `PALLAS_LOG=debug` traces per-request handling on
+//! stderr.
 
 use crate::coordinator::batcher::{next_batch, BatchPolicy};
 use crate::coordinator::pool::ThreadPool;
@@ -29,6 +42,7 @@ use crate::error::{Error, Result};
 use crate::screening::rule::{screen_multi, RuleKind};
 use crate::solver::api::{solve, SolveOptions, SolverKind};
 use crate::svm::problem::Problem;
+use crate::telemetry::{self, Counter, Histogram};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -87,12 +101,42 @@ pub struct Metrics {
     pub solves: AtomicU64,
 }
 
+/// Cached handles into the global telemetry registry so the hot path
+/// never touches the registry's name map (one `Arc` deref per event).
+struct Tele {
+    connections: Arc<Counter>,
+    requests: Arc<Counter>,
+    batches: Arc<Counter>,
+    coalesced: Arc<Counter>,
+    batch_size: Arc<Histogram>,
+    screen_seconds: Arc<Histogram>,
+    solve_seconds: Arc<Histogram>,
+    request_seconds: Arc<Histogram>,
+}
+
+impl Tele {
+    fn new() -> Self {
+        let t = telemetry::global();
+        Tele {
+            connections: t.counter("server.connections"),
+            requests: t.counter("server.requests"),
+            batches: t.counter("server.batches"),
+            coalesced: t.counter("server.batch.coalesced"),
+            batch_size: t.histogram("server.batch.size"),
+            screen_seconds: t.histogram("server.screen.seconds"),
+            solve_seconds: t.histogram("server.solve.seconds"),
+            request_seconds: t.histogram("server.request.seconds"),
+        }
+    }
+}
+
 struct Shared {
     problem: Problem,
     state: Mutex<DualState>,
     rule: RuleKind,
     solve_opts: SolveOptions,
     metrics: Metrics,
+    tele: Tele,
     stop: AtomicBool,
 }
 
@@ -122,6 +166,7 @@ impl ScreeningServer {
             rule: cfg.rule,
             solve_opts: cfg.solve,
             metrics: Metrics::default(),
+            tele: Tele::new(),
             stop: AtomicBool::new(false),
         });
 
@@ -135,6 +180,7 @@ impl ScreeningServer {
                 break; // channel closed
             }
             exec_shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+            exec_shared.tele.batches.inc();
             run_screen_batch(&exec_shared, batch);
         });
 
@@ -210,7 +256,23 @@ fn run_screen_batch(shared: &Shared, batch: Vec<ScreenJob>) {
     }
     for (state, jobs) in groups {
         let batch_size = jobs.len();
+        shared.tele.batch_size.record(batch_size as f64);
+        // "Coalesced" = requests that piggybacked on another request's
+        // stats sweep instead of paying for their own.
+        shared.tele.coalesced.add(batch_size as u64 - 1);
+        if batch_size > 1 {
+            crate::tele_debug!(
+                "server.batch",
+                "coalesced {batch_size} screen request(s) at lambda1 {:.4e}",
+                state.lambda1
+            );
+        }
         let lambda2s: Vec<f64> = jobs.iter().map(|j| j.lambda2).collect();
+        // Span: the group's shared sweep lands in `server.batch.seconds`.
+        let span = crate::telemetry::Span::enter_labeled(
+            "server.batch",
+            Some(format!("{batch_size} request(s)")),
+        );
         let result = screen_multi(
             shared.rule,
             &shared.problem.x,
@@ -219,6 +281,7 @@ fn run_screen_batch(shared: &Shared, batch: Vec<ScreenJob>) {
             state.lambda1,
             &lambda2s,
         );
+        drop(span);
         match result {
             Ok(reports) => {
                 for (job, rep) in jobs.into_iter().zip(reports) {
@@ -266,7 +329,8 @@ fn handle_connection(
     job_tx: &Sender<ScreenJob>,
 ) -> std::io::Result<()> {
     let peer = stream.peer_addr()?;
-    log::debug!("connection from {peer}");
+    shared.tele.connections.inc();
+    crate::tele_debug!("server", "connection from {peer}");
     // Bounded reads so shutdown can interrupt idle connections: the
     // handler re-checks the stop flag every timeout tick. Without this,
     // ThreadPool::drop (inside the accept thread) joins a worker that is
@@ -316,7 +380,28 @@ fn handle_connection(
     Ok(())
 }
 
+/// Times a request through [`dispatch_inner`], recording per-command
+/// latency histograms and the `server.requests` counter.
 fn dispatch(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<ScreenJob>) -> Json {
+    let t0 = std::time::Instant::now();
+    let response = dispatch_inner(cmd, req, shared, job_tx);
+    let secs = t0.elapsed().as_secs_f64();
+    shared.tele.requests.inc();
+    let hist = match cmd {
+        "screen" => &shared.tele.screen_seconds,
+        "solve" => &shared.tele.solve_seconds,
+        _ => &shared.tele.request_seconds,
+    };
+    hist.record(secs);
+    crate::tele_debug!(
+        "server",
+        "{cmd} handled in {}",
+        crate::report::timer::fmt_duration(secs)
+    );
+    response
+}
+
+fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<ScreenJob>) -> Json {
     match cmd {
         "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         "info" => {
@@ -383,6 +468,24 @@ fn dispatch(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<ScreenJob>) 
             reply_rx
                 .recv()
                 .unwrap_or_else(|_| err_json("executor dropped the request"))
+        }
+        "stats" => {
+            let snap = telemetry::global().snapshot();
+            let m = &shared.metrics;
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("screens", Json::Num(m.screens.load(Ordering::Relaxed) as f64)),
+                ("batches", Json::Num(m.batches.load(Ordering::Relaxed) as f64)),
+                ("solves", Json::Num(m.solves.load(Ordering::Relaxed) as f64)),
+                ("metrics", snap.to_json()),
+            ];
+            if matches!(req.get("prometheus"), Some(Json::Bool(true))) {
+                fields.push((
+                    "prometheus",
+                    Json::Str(crate::report::prometheus::render(&snap)),
+                ));
+            }
+            Json::obj(fields)
         }
         other => err_json(&format!("unknown cmd {other:?}")),
     }
@@ -521,6 +624,47 @@ mod tests {
         let sizes: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         // At least some requests should have shared a batch.
         assert!(sizes.iter().any(|&s| s > 1.0), "batch sizes {sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_command_reports_counters_and_latency() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.7 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let stats = c.request(&Json::obj(vec![("cmd", Json::Str("stats".into()))])).unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats:?}");
+        assert_eq!(stats.get("screens").unwrap().as_f64(), Some(1.0));
+        let metrics = stats.get("metrics").unwrap();
+        let counters = metrics.get("counters").unwrap();
+        // Registry is process-global, so only monotone lower bounds hold.
+        assert!(
+            counters.get("server.requests").unwrap().as_f64().unwrap() >= 2.0,
+            "{counters:?}"
+        );
+        let hists = metrics.get("histograms").unwrap();
+        let screen_h = hists.get("server.screen.seconds").unwrap();
+        assert!(screen_h.get("count").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(screen_h.get("p99").unwrap().as_f64().unwrap() >= 0.0);
+        // Prometheus rendering is opt-in.
+        assert!(stats.get("prometheus").is_none());
+        let stats = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("stats".into())),
+                ("prometheus", Json::Bool(true)),
+            ]))
+            .unwrap();
+        let text = stats.get("prometheus").unwrap().as_str().unwrap();
+        assert!(text.contains("server_requests_total"), "{text}");
+        assert!(text.contains("quantile=\"0.99\""), "{text}");
         server.shutdown();
     }
 

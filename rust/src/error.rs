@@ -4,38 +4,59 @@
 //! failures by subsystem so callers (CLI, server, benches) can react
 //! differently to, e.g., a malformed request vs a missing artifact.
 
-use thiserror::Error;
-
-/// Crate-wide error type.
-#[derive(Debug, Error)]
+/// Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+/// crate is std-only, so no `thiserror` derive).
+#[derive(Debug)]
 pub enum Error {
     /// Input data is malformed (parsing, dimension mismatch, bad labels).
-    #[error("data error: {0}")]
     Data(String),
 
     /// A configuration value is missing or invalid.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Solver failed to make progress or diverged.
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// Screening-rule precondition violated (e.g. lambda2 >= lambda1).
-    #[error("screening error: {0}")]
     Screening(String),
 
     /// PJRT / XLA runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / service failure (pool, protocol, socket).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Screening(m) => write!(f, "screening error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -34,6 +34,25 @@
 //! let report = svmscreen::path::runner::run_path(&problem, &grid, &cfg).unwrap();
 //! println!("{}", report.summary_table());
 //! ```
+//!
+//! ## Observability
+//!
+//! Every hot layer (solvers, screening sweeps, path steps, the
+//! coordinator) reports into the in-tree [`telemetry`] subsystem — a
+//! global metrics registry (counters / gauges / log-scale latency
+//! histograms with p50/p90/p99), RAII wall-time spans, and leveled
+//! event sinks. Configuration is environment-driven:
+//!
+//! * **`PALLAS_LOG`** = `error` | `warn` | `info` | `debug` | `trace` |
+//!   `off` — stderr verbosity (default `warn`). `PALLAS_LOG=debug`
+//!   shows span-annotated begin/end lines for path runs and server
+//!   requests.
+//! * **`PALLAS_LOG_JSON`** = `path.jsonl` — append every event as one
+//!   JSON object per line (machine-readable traces).
+//!
+//! The screening service exposes the live registry over the wire via
+//! the `{"cmd":"stats"}` protocol command (JSON snapshot, optionally a
+//! Prometheus text rendering — see [`report::prometheus`]).
 #![allow(clippy::needless_range_loop)]
 
 pub mod cli;
@@ -48,6 +67,7 @@ pub mod runtime;
 pub mod screening;
 pub mod solver;
 pub mod svm;
+pub mod telemetry;
 pub mod testkit;
 
 /// Convenience re-exports for downstream users.

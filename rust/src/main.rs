@@ -12,6 +12,9 @@ use svmscreen::prelude::*;
 use svmscreen::report::table::fnum;
 
 fn main() {
+    // Arm the telemetry sinks (PALLAS_LOG / PALLAS_LOG_JSON) before any
+    // subsystem emits.
+    svmscreen::telemetry::init_from_env();
     let args: Vec<String> = std::env::args().skip(1).collect();
     match run(&args) {
         Ok(()) => {}

@@ -27,6 +27,7 @@ use crate::screening::rule::{screen_all, RuleKind};
 use crate::solver::api::{SolveOptions, SolverKind};
 use crate::solver::reduced::ReducedProblem;
 use crate::svm::problem::Problem;
+use crate::telemetry::Span;
 
 /// Path-runner configuration.
 #[derive(Debug, Clone)]
@@ -100,7 +101,18 @@ impl PathReport {
 /// Runs the sequential-screening path. `grid` must be descending and
 /// strictly below `problem.lambda_max()`.
 pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<PathReport> {
-    let t0 = std::time::Instant::now();
+    // Span (not a raw Instant): the run's wall time lands in the
+    // `path.run.seconds` histogram and the debug trace for free.
+    let run_span = Span::enter_labeled(
+        "path.run",
+        Some(format!(
+            "{} rule={} solver={} steps={}",
+            problem.name,
+            cfg.rule.name(),
+            cfg.solver.name(),
+            grid.len()
+        )),
+    );
     let m = problem.m();
     let lmax = problem.lambda_max();
 
@@ -120,6 +132,7 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             )));
         }
         // 1. Screen (lambda_prev, theta_prev) -> lambda.
+        let screen_span = Span::enter("path.screen");
         let screen = screen_all(
             cfg.rule,
             &problem.x,
@@ -130,9 +143,10 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
         )?;
         let mut kept = screen.kept_indices();
         let screen_seconds = screen.seconds;
+        drop(screen_span);
 
         // 2. Reduced solve with warm start.
-        let t_solve = std::time::Instant::now();
+        let solve_span = Span::enter_labeled("path.solve", Some(format!("lambda {lambda:.4e}")));
         let mut violations = 0usize;
         let (w, b, iterations, rel_gap) = loop {
             let rep = if kept.len() == m {
@@ -175,14 +189,21 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             kept.append(&mut violators);
             kept.sort_unstable();
         };
-        let solve_seconds = t_solve.elapsed().as_secs_f64();
+        let solve_seconds = solve_span.finish();
+        if violations > 0 {
+            crate::tele_warn!(
+                "path",
+                "unsafe rule {} repaired {violations} violation(s) at lambda {lambda:.4e}",
+                cfg.rule.name()
+            );
+        }
 
         // 4. Dual map for the next step.
         theta_prev = crate::svm::dual::theta_from_primal(&problem.x, &problem.y, &w, b, lambda);
         lambda_prev = lambda;
 
         let nnz = w.iter().filter(|v| **v != 0.0).count();
-        steps.push(PathStep {
+        let step = PathStep {
             lambda,
             lambda_frac: lambda / lmax,
             kept: kept.len(),
@@ -194,7 +215,9 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             screen_seconds,
             solve_seconds,
             violations,
-        });
+        };
+        step.emit();
+        steps.push(step);
         w_prev = w.clone();
         weights.push(w);
         biases.push(b);
@@ -207,7 +230,7 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
         steps,
         weights,
         biases,
-        total_seconds: t0.elapsed().as_secs_f64(),
+        total_seconds: run_span.finish(),
     })
 }
 

@@ -1,6 +1,8 @@
 //! Per-step path records.
 
+use crate::coordinator::protocol::Json;
 use crate::screening::RuleKind;
+use crate::telemetry::{self, Level};
 
 /// One λ-step of a path run.
 #[derive(Debug, Clone)]
@@ -43,6 +45,54 @@ impl PathStep {
             "screen_s",
             "solve_s",
         ]
+    }
+
+    /// The step as a JSON object (JSONL traces, `stats` payloads).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lambda", Json::Num(self.lambda)),
+            ("lambda_frac", Json::Num(self.lambda_frac)),
+            ("kept", Json::Num(self.kept as f64)),
+            ("screened", Json::Num(self.screened as f64)),
+            ("rejection", Json::Num(self.rejection)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("rel_gap", Json::Num(self.rel_gap)),
+            ("screen_seconds", Json::Num(self.screen_seconds)),
+            ("solve_seconds", Json::Num(self.solve_seconds)),
+            ("violations", Json::Num(self.violations as f64)),
+        ])
+    }
+
+    /// Reports this step into the telemetry layer: aggregate counters
+    /// plus one structured `path.step` event (the JSONL sink records
+    /// the full record; stderr gets a one-liner at debug level).
+    pub fn emit(&self) {
+        let tele = telemetry::global();
+        tele.counter("path.steps").inc();
+        tele.counter("path.features_screened").add(self.screened as u64);
+        tele.counter("path.features_kept").add(self.kept as u64);
+        tele.counter("path.violations").add(self.violations as u64);
+        tele.gauge("path.last_rejection").set(self.rejection);
+        if telemetry::enabled(Level::Debug) {
+            telemetry::emit_with(
+                Level::Debug,
+                "path.step",
+                &format!(
+                    "lambda/lmax {:.4}: kept {} screened {} nnz {} \
+                     ({} iters, rel_gap {:.2e}, screen {:.4}s solve {:.4}s)",
+                    self.lambda_frac,
+                    self.kept,
+                    self.screened,
+                    self.nnz,
+                    self.iterations,
+                    self.rel_gap,
+                    self.screen_seconds,
+                    self.solve_seconds
+                ),
+                Some(&self.to_json()),
+            );
+        }
     }
 
     /// A table row for reports.
@@ -121,6 +171,26 @@ mod tests {
         assert_eq!(t.solve_seconds, 6.0);
         assert!((t.mean_rejection - 0.3).abs() < 1e-12);
         assert_eq!(t.violations, 3);
+    }
+
+    #[test]
+    fn to_json_and_emit_report_all_fields() {
+        let s = step(0.9, 0.1, 2);
+        let json = s.to_json().encode();
+        for key in ["lambda", "kept", "screened", "nnz", "rel_gap", "violations"] {
+            assert!(json.contains(&format!("\"{key}\"")), "{json}");
+        }
+        let before = crate::telemetry::global().snapshot();
+        s.emit();
+        let after = crate::telemetry::global().snapshot();
+        assert_eq!(
+            after.counters["path.steps"],
+            before.counters.get("path.steps").copied().unwrap_or(0) + 1
+        );
+        assert_eq!(
+            after.counters["path.violations"],
+            before.counters.get("path.violations").copied().unwrap_or(0) + 2
+        );
     }
 
     #[test]

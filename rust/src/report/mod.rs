@@ -1,8 +1,11 @@
-//! Reporting substrate: ASCII tables, CSV emission, timers and bench
-//! statistics. The vendored crate set has no `criterion`, so the bench
-//! harness in `benches/` builds on [`timer::BenchStats`].
+//! Reporting substrate: ASCII tables, CSV emission, timers, bench
+//! statistics and Prometheus text rendering. The vendored crate set has
+//! no `criterion`, so the bench harness in `benches/` builds on
+//! [`timer::BenchStats`]; [`prometheus`] renders live telemetry
+//! snapshots for scrapers.
 
 pub mod csv;
+pub mod prometheus;
 pub mod table;
 pub mod timer;
 

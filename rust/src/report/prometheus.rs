@@ -1,0 +1,100 @@
+//! Prometheus text-exposition rendering of a telemetry snapshot.
+//!
+//! No `prometheus` crate in the vendored set, so this emits the plain
+//! text format by hand: counters as `_total`, gauges as-is, histogram
+//! summaries as `<name>{quantile="…"}` summary series plus `_sum` /
+//! `_count`. Metric names are sanitized (`.`/`-` → `_`) to match the
+//! Prometheus grammar. The server returns this rendering from
+//! `{"cmd":"stats","prometheus":true}` so any scraper-shaped tool can
+//! consume the live registry.
+
+use crate::telemetry::MetricsSnapshot;
+use std::fmt::Write as _;
+
+/// Maps a dotted metric name to a legal Prometheus name.
+fn sanitize(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Formats a sample value (Prometheus spells non-finite values `NaN`).
+fn val(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "NaN".into()
+    }
+}
+
+/// Renders the snapshot in Prometheus text exposition format.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n}_total counter");
+        let _ = writeln!(out, "{n}_total {v}");
+    }
+    for (name, v) in &snap.gauges {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n} gauge");
+        let _ = writeln!(out, "{n} {}", val(*v));
+    }
+    for (name, h) in &snap.histograms {
+        let n = sanitize(name);
+        let _ = writeln!(out, "# TYPE {n} summary");
+        for (q, v) in [("0.5", h.p50), ("0.9", h.p90), ("0.99", h.p99)] {
+            let _ = writeln!(out, "{n}{{quantile=\"{q}\"}} {}", val(v));
+        }
+        let _ = writeln!(out, "{n}_sum {}", val(h.sum));
+        let _ = writeln!(out, "{n}_count {}", h.count);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("server.screen.seconds"), "server_screen_seconds");
+        assert_eq!(sanitize("path-steps"), "path_steps");
+        assert_eq!(sanitize("9lives"), "_9lives");
+    }
+
+    #[test]
+    fn renders_all_metric_kinds() {
+        let r = Registry::new();
+        r.counter("a.requests").add(7);
+        r.gauge("b.lambda").set(0.25);
+        for _ in 0..4 {
+            r.histogram("c.seconds").record(1e-3);
+        }
+        let text = render(&r.snapshot());
+        assert!(text.contains("# TYPE a_requests_total counter"), "{text}");
+        assert!(text.contains("a_requests_total 7"), "{text}");
+        assert!(text.contains("b_lambda 0.25"), "{text}");
+        assert!(text.contains("c_seconds{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("c_seconds_count 4"), "{text}");
+        // every non-comment line is "name value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "{line}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_renders_nan_not_panic() {
+        let r = Registry::new();
+        let _ = r.histogram("empty.seconds");
+        let text = render(&r.snapshot());
+        assert!(text.contains("empty_seconds_count 0"), "{text}");
+        assert!(text.contains("NaN"), "{text}");
+    }
+}

@@ -76,13 +76,17 @@ impl BenchStats {
             f();
             out.push(t0.elapsed().as_secs_f64());
         }
-        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.sort_by(f64::total_cmp);
         BenchStats { samples: out }
     }
 
-    /// Builds from raw (unsorted) samples.
+    /// Builds from raw (unsorted) samples. NaN samples are dropped —
+    /// they carry no timing information and a `partial_cmp(..).unwrap()`
+    /// sort would panic on them (a NaN can reach here from, e.g., a
+    /// failed external measurement fed through [`BenchStats`]).
     pub fn from_samples(mut samples: Vec<f64>) -> Self {
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.retain(|v| !v.is_nan());
+        samples.sort_by(f64::total_cmp);
         BenchStats { samples }
     }
 
@@ -131,10 +135,14 @@ impl BenchStats {
     }
 }
 
-/// Pretty-prints a duration in adaptive units.
+/// Pretty-prints a duration in adaptive units. Negative values (clock
+/// skew, subtracted timestamps) keep their sign instead of falling
+/// into the nanosecond branch.
 pub fn fmt_duration(secs: f64) -> String {
     if !secs.is_finite() {
         "n/a".into()
+    } else if secs < 0.0 {
+        format!("-{}", fmt_duration(-secs))
     } else if secs >= 1.0 {
         format!("{secs:.3}s")
     } else if secs >= 1e-3 {
@@ -188,5 +196,20 @@ mod tests {
         assert_eq!(fmt_duration(2.5e-6), "2.500us");
         assert_eq!(fmt_duration(2.5e-8), "25ns");
         assert_eq!(fmt_duration(f64::NAN), "n/a");
+        assert_eq!(fmt_duration(-0.0025), "-2.500ms");
+        assert_eq!(fmt_duration(-2.5), "-2.500s");
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_are_dropped() {
+        let s = BenchStats::from_samples(vec![2.0, f64::NAN, 1.0, f64::NAN, 3.0]);
+        assert_eq!(s.samples, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.median(), 2.0);
+        // all-NaN input degrades to the empty-stats path
+        let empty = BenchStats::from_samples(vec![f64::NAN, f64::NAN]);
+        assert!(empty.samples.is_empty());
+        assert!(empty.median().is_nan());
+        assert!(empty.mean().is_nan());
+        assert_eq!(empty.display(), "n/a [n/a .. n/a]");
     }
 }

@@ -1,21 +1,43 @@
 //! PJRT runtime: loads the AOT HLO artifacts produced by
 //! `python/compile/aot.py` and executes them from the rust hot path.
 //!
-//! * [`engine`] — the [`engine::PjrtEngine`]: PJRT CPU client + artifact
+//! * [`engine`] — the `PjrtEngine`: PJRT CPU client + artifact
 //!   registry keyed by compiled shape (discovered from filenames).
 //! * [`literal`] — `Literal` ⇄ slice helpers and padding.
 //! * [`exec`] — typed executions: the PJRT screening pass
-//!   ([`exec::screen_all_pjrt`]) and the gradient step, each
+//!   (`screen_all_pjrt`) and the gradient step, each
 //!   cross-validated against the native rust implementations in
 //!   integration tests.
 //!
 //! Python never runs at serving time: the artifacts are plain HLO text
 //! (the interchange format xla_extension 0.5.1 accepts — serialized
 //! jax ≥ 0.5 protos are rejected for their 64-bit instruction ids).
+//!
+//! ## Feature gate
+//!
+//! The PJRT path needs the `xla` crate (a PJRT C-API binding), which
+//! is not part of the std-only default build. It compiles only with
+//! `--features pjrt` (plus the vendored `xla` crate wired into
+//! `Cargo.toml`). Without the feature this module exposes the same
+//! public surface as [`stub`] types whose `load`/`screen_all_pjrt`
+//! return [`crate::error::Error::Runtime`] — callers (CLI `--engine
+//! pjrt`, benches, tests) degrade gracefully instead of failing to
+//! compile.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod exec;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 
+#[cfg(feature = "pjrt")]
 pub use engine::PjrtEngine;
+#[cfg(feature = "pjrt")]
 pub use exec::{screen_all_pjrt, PjrtScreenOptions};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{screen_all_pjrt, PjrtEngine, PjrtScreenOptions};

@@ -1,0 +1,127 @@
+//! Std-only stand-in for the PJRT runtime (built when the `pjrt`
+//! feature is off).
+//!
+//! Mirrors the public surface of [`super::engine`]/[`super::exec`] so
+//! every caller — `svmscreen screen --engine pjrt`, the T4 bench, the
+//! `pjrt_compare` example, `rust/tests/runtime.rs` — compiles
+//! unchanged. All entry points return
+//! [`Error::Runtime`](crate::error::Error::Runtime); artifact-dir
+//! discovery still works so guarded call sites (`if dir.exists()`)
+//! skip cleanly.
+
+use crate::data::FeatureMatrix;
+use crate::error::{Error, Result};
+use crate::screening::rule::ScreenReport;
+use std::path::{Path, PathBuf};
+
+fn disabled<T>() -> Result<T> {
+    Err(Error::runtime(
+        "svmscreen was built without the `pjrt` feature; \
+         rebuild with `--features pjrt` and the vendored `xla` crate",
+    ))
+}
+
+/// Stub of a compiled screening executable.
+#[derive(Debug, Clone, Copy)]
+pub struct ScreenExe {
+    /// Compiled sample dimension (padded n).
+    pub n: usize,
+    /// Compiled feature-block size.
+    pub block_m: usize,
+}
+
+impl ScreenExe {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn run(&self, _xhat_block: &[f32], _v: &[f32], _shared: &[f32]) -> Result<Vec<f32>> {
+        disabled()
+    }
+}
+
+/// Stub of a compiled gradient executable.
+#[derive(Debug, Clone, Copy)]
+pub struct GradExe {
+    /// Compiled sample dimension.
+    pub n: usize,
+    /// Compiled feature dimension.
+    pub m: usize,
+}
+
+impl GradExe {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn run(&self, _x: &[f32], _y: &[f32], _w: &[f32], _b: f32) -> Result<(Vec<f32>, f32, f32)> {
+        disabled()
+    }
+}
+
+/// Stub engine: construction always fails with a runtime error.
+#[derive(Debug)]
+pub struct PjrtEngine {
+    /// Where artifacts would have been loaded from.
+    pub artifact_dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Always fails: the binary was built without PJRT support.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        disabled()
+    }
+
+    /// Default artifact dir relative to the repo root / cwd (same
+    /// resolution as the real engine, so existence checks behave
+    /// identically).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SVMSCREEN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// No compiled shapes in a stub engine.
+    pub fn screen_exe_for(&self, _n: usize) -> Option<&ScreenExe> {
+        None
+    }
+
+    /// No compiled shapes in a stub engine.
+    pub fn grad_exe_for(&self, _n: usize, _m: usize) -> Option<&GradExe> {
+        None
+    }
+}
+
+/// Options for the PJRT screening pass (kept identical to the real
+/// implementation so configs round-trip).
+#[derive(Debug, Clone, Copy)]
+pub struct PjrtScreenOptions {
+    /// Keep iff `bound ≥ 1 − keep_margin` — absorbs f32 kernel error.
+    pub keep_margin: f64,
+}
+
+impl Default for PjrtScreenOptions {
+    fn default() -> Self {
+        PjrtScreenOptions { keep_margin: 1e-3 }
+    }
+}
+
+/// Always fails: the binary was built without PJRT support.
+pub fn screen_all_pjrt<X: FeatureMatrix>(
+    _engine: &PjrtEngine,
+    _x: &X,
+    _y: &[f64],
+    _theta1: &[f64],
+    _lambda1: f64,
+    _lambda2: f64,
+    _opts: &PjrtScreenOptions,
+) -> Result<ScreenReport> {
+    disabled()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surface_errors_cleanly() {
+        let err = PjrtEngine::load("/nonexistent/dir").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(!PjrtEngine::default_dir().as_os_str().is_empty());
+    }
+}

@@ -165,14 +165,41 @@ pub fn screen_all<X: FeatureMatrix>(
             keep[j] = score >= KEEP_THRESHOLD;
         }
     }
-    Ok(ScreenReport {
+    let report = ScreenReport {
         rule,
         lambda1,
         lambda2,
         keep,
         bounds,
         seconds: t0.elapsed().as_secs_f64(),
-    })
+    };
+    record_screen_telemetry(&report, 1);
+    Ok(report)
+}
+
+/// Reports a finished sweep into the global telemetry registry:
+/// features screened/kept (by rule kind) plus the sweep-latency
+/// histogram. `sweeps` is the number of O(nnz) data passes the report
+/// amortizes (1 for [`screen_all`]; `1/k`-shared for [`screen_multi`],
+/// which calls this once per target with `sweeps = 0` after the first).
+fn record_screen_telemetry(report: &ScreenReport, sweeps: u64) {
+    let tele = crate::telemetry::global();
+    let name = report.rule.name();
+    tele.counter(&format!("screening.{name}.sweeps")).add(sweeps);
+    tele.counter(&format!("screening.{name}.features_screened"))
+        .add(report.n_screened() as u64);
+    tele.counter(&format!("screening.{name}.features_kept"))
+        .add((report.keep.len() - report.n_screened()) as u64);
+    tele.histogram("screening.sweep_seconds").record(report.seconds);
+    crate::tele_debug!(
+        "screening",
+        "rule {name} l2/l1 {:.4}: screened {}/{} ({:.1}%) in {}",
+        report.lambda2 / report.lambda1,
+        report.n_screened(),
+        report.keep.len(),
+        100.0 * report.rejection_ratio(),
+        crate::report::timer::fmt_duration(report.seconds)
+    );
 }
 
 /// Screens the same features for **several** target λ₂ in one pass over
@@ -214,7 +241,7 @@ pub fn screen_multi<X: FeatureMatrix>(
         }
     }
     let seconds = t0.elapsed().as_secs_f64() / k as f64;
-    Ok(lambda2s
+    let reports: Vec<ScreenReport> = lambda2s
         .iter()
         .zip(keeps.into_iter().zip(bounds))
         .map(|(&l2, (keep, bounds))| ScreenReport {
@@ -225,7 +252,12 @@ pub fn screen_multi<X: FeatureMatrix>(
             bounds,
             seconds,
         })
-        .collect())
+        .collect();
+    for (i, rep) in reports.iter().enumerate() {
+        // The whole batch shares one data sweep; count it once.
+        record_screen_telemetry(rep, if i == 0 { 1 } else { 0 });
+    }
+    Ok(reports)
 }
 
 #[cfg(test)]

@@ -166,6 +166,13 @@ impl Solver for CdSolver {
                 if opts.record_gap_trace {
                     gap_trace.push((epoch + 1, rep.rel_gap));
                 }
+                crate::tele_trace!(
+                    "solver.cd",
+                    "epoch {} rel_gap {:.3e} frozen {}",
+                    epoch + 1,
+                    rep.rel_gap,
+                    n_frozen
+                );
                 if rep.rel_gap <= opts.tol {
                     converged = true;
                     break 'outer;
@@ -204,6 +211,20 @@ impl Solver for CdSolver {
             Some(g) => g,
             None => duality_gap(x, y, &w, lambda).0,
         };
+        let seconds = t0.elapsed().as_secs_f64();
+        let tele = crate::telemetry::global();
+        tele.counter("solver.cd.solves").inc();
+        tele.counter("solver.cd.epochs").add(iterations as u64);
+        tele.counter("solver.cd.frozen_coords").add(n_frozen as u64);
+        tele.histogram("solver.cd.seconds").record(seconds);
+        crate::tele_debug!(
+            "solver.cd",
+            "lambda {lambda:.4e}: {} epochs, rel_gap {:.3e}, converged {} in {}",
+            iterations,
+            gap.rel_gap,
+            converged,
+            crate::report::timer::fmt_duration(seconds)
+        );
         Ok(SolveReport {
             w,
             b,
@@ -211,7 +232,7 @@ impl Solver for CdSolver {
             iterations,
             gap,
             converged,
-            seconds: t0.elapsed().as_secs_f64(),
+            seconds,
             gap_trace,
         })
     }

@@ -154,6 +154,12 @@ impl Solver for FistaSolver {
                 if opts.record_gap_trace {
                     gap_trace.push((it + 1, rep.rel_gap));
                 }
+                crate::tele_trace!(
+                    "solver.fista",
+                    "step {} rel_gap {:.3e}",
+                    it + 1,
+                    rep.rel_gap
+                );
                 if rep.rel_gap <= opts.tol {
                     converged = true;
                     break;
@@ -164,6 +170,19 @@ impl Solver for FistaSolver {
         // Final exact-bias polish (free, improves the certificate).
         let (gap, dp, _) = duality_gap(x, y, &w, lambda);
         let gap = if let Some(g) = last_gap.filter(|_| converged) { g } else { gap };
+        let seconds = t0.elapsed().as_secs_f64();
+        let tele = crate::telemetry::global();
+        tele.counter("solver.fista.solves").inc();
+        tele.counter("solver.fista.steps").add(iterations as u64);
+        tele.histogram("solver.fista.seconds").record(seconds);
+        crate::tele_debug!(
+            "solver.fista",
+            "lambda {lambda:.4e}: {} steps, rel_gap {:.3e}, converged {} in {}",
+            iterations,
+            gap.rel_gap,
+            converged,
+            crate::report::timer::fmt_duration(seconds)
+        );
         Ok(SolveReport {
             w,
             b: dp.b,
@@ -171,7 +190,7 @@ impl Solver for FistaSolver {
             iterations,
             gap,
             converged,
-            seconds: t0.elapsed().as_secs_f64(),
+            seconds,
             gap_trace,
         })
     }

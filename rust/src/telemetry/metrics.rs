@@ -1,0 +1,479 @@
+//! The global metrics registry: named counters, gauges and log-scale
+//! histograms, all lock-free on the hot path.
+//!
+//! Design constraints (same as the rest of the crate): std-only, no
+//! `metrics`/`prometheus` crates in the vendored set. Handles returned
+//! by [`Registry::counter`]/[`gauge`](Registry::gauge)/
+//! [`histogram`](Registry::histogram) are `Arc`s — look a metric up
+//! once (registry lookup takes a mutex) and then update it with plain
+//! relaxed atomics from any thread.
+//!
+//! Histograms are log-scale: half-power-of-two buckets spanning
+//! `[2⁻³⁰ s, 2⁸ s]` (≈1 ns … ≈4 min), which bounds the quantile
+//! estimation error at ~19% — plenty for latency percentiles — while
+//! keeping `record` a single atomic increment.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Adds 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Adds `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge (f64 stored as bits).
+#[derive(Debug)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge { bits: AtomicU64::new(0.0f64.to_bits()) }
+    }
+}
+
+impl Gauge {
+    /// Sets the gauge.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Smallest bucket lower edge: `2^MIN_EXP` seconds (≈ 1 ns).
+const MIN_EXP: i32 = -30;
+/// Largest bucket upper edge: `2^MAX_EXP` seconds (= 256 s).
+const MAX_EXP: i32 = 8;
+/// Buckets per power of two.
+const PER_POW2: i32 = 2;
+/// Bucket count (plus one overflow bucket at the end).
+const N_BUCKETS: usize = ((MAX_EXP - MIN_EXP) * PER_POW2) as usize + 1;
+
+/// A log-scale histogram of nonnegative f64 samples (typically seconds).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+/// Maps a sample to its bucket index.
+fn bucket_index(v: f64) -> usize {
+    if v <= 0.0 {
+        return 0;
+    }
+    let idx = ((v.log2() - MIN_EXP as f64) * PER_POW2 as f64).floor() as i64;
+    idx.clamp(0, N_BUCKETS as i64 - 1) as usize
+}
+
+/// Geometric midpoint of bucket `i` (used as its quantile representative).
+fn bucket_mid(i: usize) -> f64 {
+    let lower_log2 = MIN_EXP as f64 + i as f64 / PER_POW2 as f64;
+    (lower_log2 + 0.5 / PER_POW2 as f64).exp2()
+}
+
+impl Histogram {
+    /// Records one sample. NaN, infinite and negative samples are
+    /// dropped (they would poison quantiles).
+    pub fn record(&self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        // CAS loops for the f64 aggregates; contention here is rare
+        // (histograms are updated per span/request, not per coordinate).
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        update_extreme(&self.min_bits, v, |new, old| new < old);
+        update_extreme(&self.max_bits, v, |new, old| new > old);
+    }
+
+    /// Records a [`std::time::Duration`] in seconds.
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A consistent-enough point-in-time summary.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count: u64 = counts.iter().sum();
+        let sum = f64::from_bits(self.sum_bits.load(Ordering::Relaxed));
+        let min = f64::from_bits(self.min_bits.load(Ordering::Relaxed));
+        let max = f64::from_bits(self.max_bits.load(Ordering::Relaxed));
+        let quantile = |q: f64| -> f64 {
+            if count == 0 {
+                return f64::NAN;
+            }
+            let target = (q * count as f64).ceil().max(1.0) as u64;
+            let mut seen = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    // Clamp the bucket representative into the observed
+                    // range so tiny histograms stay sensible.
+                    return bucket_mid(i).clamp(min, max);
+                }
+            }
+            max
+        };
+        HistogramSnapshot {
+            count,
+            sum,
+            mean: if count == 0 { f64::NAN } else { sum / count as f64 },
+            min: if count == 0 { f64::NAN } else { min },
+            max: if count == 0 { f64::NAN } else { max },
+            p50: quantile(0.50),
+            p90: quantile(0.90),
+            p99: quantile(0.99),
+        }
+    }
+}
+
+fn update_extreme(bits: &AtomicU64, v: f64, better: impl Fn(f64, f64) -> bool) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    while better(v, f64::from_bits(cur)) {
+        match bits.compare_exchange_weak(
+            cur,
+            v.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Point-in-time summary of one histogram.
+#[derive(Debug, Clone, Copy)]
+pub struct HistogramSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of samples.
+    pub sum: f64,
+    /// Arithmetic mean (NaN when empty).
+    pub mean: f64,
+    /// Smallest sample (NaN when empty).
+    pub min: f64,
+    /// Largest sample (NaN when empty).
+    pub max: f64,
+    /// Estimated median.
+    pub p50: f64,
+    /// Estimated 90th percentile.
+    pub p90: f64,
+    /// Estimated 99th percentile.
+    pub p99: f64,
+}
+
+/// The named-metric registry. One global instance lives behind
+/// [`global`]; tests may build private ones.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// Creates an empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// The counter named `name`, created on first use.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        lookup(&self.counters, name)
+    }
+
+    /// The gauge named `name`, created on first use.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        lookup(&self.gauges, name)
+    }
+
+    /// The histogram named `name`, created on first use.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        lookup(&self.histograms, name)
+    }
+
+    /// A point-in-time snapshot of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Drops every registered metric (test isolation helper). Handles
+    /// obtained before the reset keep working but are orphaned.
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.histograms.lock().unwrap().clear();
+    }
+}
+
+fn lookup<T: Default>(map: &Mutex<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    let mut guard = map.lock().unwrap();
+    if let Some(v) = guard.get(name) {
+        return Arc::clone(v);
+    }
+    let v = Arc::new(T::default());
+    guard.insert(name.to_string(), Arc::clone(&v));
+    v
+}
+
+/// Snapshot of the whole registry (sorted names for stable rendering).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram summaries by name.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Renders the snapshot as a protocol [`Json`] object — the payload
+    /// of the server's `{"cmd":"stats"}` response.
+    ///
+    /// [`Json`]: crate::coordinator::protocol::Json
+    pub fn to_json(&self) -> crate::coordinator::protocol::Json {
+        use crate::coordinator::protocol::Json;
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges.iter().map(|(k, &v)| (k.clone(), num(v))).collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum", num(h.sum)),
+                            ("mean", num(h.mean)),
+                            ("min", num(h.min)),
+                            ("max", num(h.max)),
+                            ("p50", num(h.p50)),
+                            ("p90", num(h.p90)),
+                            ("p99", num(h.p99)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+/// The process-wide registry every instrumented layer reports into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("a.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("a.count").get(), 5);
+        let g = r.gauge("a.level");
+        g.set(2.5);
+        assert_eq!(r.gauge("a.level").get(), 2.5);
+        // same name -> same underlying metric
+        assert!(Arc::ptr_eq(&c, &r.counter("a.count")));
+    }
+
+    #[test]
+    fn histogram_quantiles_are_order_of_magnitude_right() {
+        let h = Histogram::default();
+        for _ in 0..90 {
+            h.record(1e-3); // 90 samples at ~1ms
+        }
+        for _ in 0..10 {
+            h.record(1e-1); // 10 samples at ~100ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        // log-bucket estimate: within a factor of sqrt(2) of the truth
+        assert!(s.p50 >= 0.5e-3 && s.p50 <= 2e-3, "p50 {}", s.p50);
+        assert!(s.p99 >= 0.5e-1 && s.p99 <= 2e-1, "p99 {}", s.p99);
+        assert!((s.mean - (90.0 * 1e-3 + 10.0 * 1e-1) / 100.0).abs() < 1e-9);
+        assert_eq!(s.min, 1e-3);
+        assert_eq!(s.max, 1e-1);
+    }
+
+    #[test]
+    fn histogram_ignores_non_finite_and_negative() {
+        let h = Histogram::default();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-1.0);
+        assert_eq!(h.count(), 0);
+        let s = h.snapshot();
+        assert!(s.p50.is_nan() && s.mean.is_nan());
+        h.record(0.0); // zero is legal (fastest bucket)
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_clamped() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(1e-12), 0);
+        assert_eq!(bucket_index(1e9), N_BUCKETS - 1);
+        let mut prev = 0;
+        for e in -28..7 {
+            let i = bucket_index((e as f64).exp2());
+            assert!(i >= prev, "bucket index must be monotone");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn parallel_increments_sum_correctly() {
+        // The concurrency contract: increments from many threads are
+        // never lost (satellite test; the pool-driven variant lives in
+        // rust/tests/telemetry.rs).
+        let r = Arc::new(Registry::new());
+        let threads: u64 = 8;
+        let per_thread: u64 = 10_000;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let c = r.counter("contended");
+                    let h = r.histogram("contended.seconds");
+                    for i in 0..per_thread {
+                        c.inc();
+                        h.record(1e-6 * (1 + i % 7) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.counter("contended").get(), threads * per_thread);
+        assert_eq!(r.histogram("contended.seconds").count(), threads * per_thread);
+    }
+
+    #[test]
+    fn snapshot_to_json_encodes() {
+        let r = Registry::new();
+        r.counter("x").add(3);
+        r.gauge("y").set(0.5);
+        r.histogram("z").record(1e-3);
+        let json = r.snapshot().to_json();
+        let enc = json.encode();
+        assert!(enc.contains("\"x\":3"), "{enc}");
+        assert!(enc.contains("\"y\":0.5"), "{enc}");
+        assert!(enc.contains("\"count\":1"), "{enc}");
+        // NaN-free: empty histogram quantiles encode as null
+        let r2 = Registry::new();
+        let _ = r2.histogram("empty");
+        let enc2 = r2.snapshot().to_json().encode();
+        assert!(enc2.contains("\"mean\":null"), "{enc2}");
+    }
+
+    #[test]
+    fn reset_clears_names() {
+        let r = Registry::new();
+        r.counter("gone").inc();
+        r.reset();
+        assert_eq!(r.snapshot().counters.len(), 0);
+        assert_eq!(r.counter("gone").get(), 0);
+    }
+}

@@ -1,0 +1,125 @@
+//! In-tree telemetry: metrics registry, structured spans and event
+//! sinks.
+//!
+//! The paper's whole argument is *measured* — rejection ratios,
+//! screen-vs-solve time, safety violations. This module is the single
+//! surface every hot layer reports into, std-only because the vendored
+//! crate set has no `tracing`/`log`/`prometheus`:
+//!
+//! * [`metrics`] — a global, lock-cheap registry of named counters,
+//!   gauges and log-scale histograms ([`global()`]); snapshots carry
+//!   p50/p90/p99 and render to protocol JSON or Prometheus text
+//!   ([`crate::report::prometheus`]).
+//! * [`span`] — RAII [`Span`] guards recording nested wall-time, used
+//!   by the path runner and the server instead of raw stopwatches.
+//! * [`sink`] — a leveled stderr logger (`PALLAS_LOG=debug`) plus an
+//!   optional JSONL trace file (`PALLAS_LOG_JSON=path`), with the
+//!   [`tele_error!`](crate::tele_error)…[`tele_trace!`](crate::tele_trace)
+//!   macros as the front end.
+//!
+//! ## Instrumented layers
+//!
+//! | layer | metrics (prefix) | events |
+//! |---|---|---|
+//! | solver CD / FISTA | `solver.cd.*`, `solver.fista.*` | solve summary (debug), gap checks (trace) |
+//! | screening sweeps | `screening.*` | per-sweep summary (debug) |
+//! | path runner | `path.*` + spans `path.run/screen/solve` | per-step `PathStep` events (debug) |
+//! | coordinator | `server.*` request/latency/batching | connection + request events |
+//!
+//! The server exposes all of it live via the `{"cmd":"stats"}`
+//! protocol command.
+//!
+//! ## Quick use
+//!
+//! ```
+//! use svmscreen::telemetry::{self, Span};
+//!
+//! telemetry::init_from_env(); // reads PALLAS_LOG / PALLAS_LOG_JSON
+//! telemetry::global().counter("demo.events").inc();
+//! let span = Span::enter("demo.work");
+//! svmscreen::tele_debug!("demo", "inside {}", telemetry::current_path());
+//! drop(span); // records demo.work.seconds
+//! assert!(telemetry::global().snapshot().counters["demo.events"] >= 1);
+//! ```
+
+pub mod metrics;
+pub mod sink;
+pub mod span;
+
+pub use metrics::{
+    global, Counter, Gauge, Histogram, HistogramSnapshot, MetricsSnapshot, Registry,
+};
+pub use sink::{emit, emit_with, enabled, init_from_env, set_stderr_level, Level};
+pub use span::{current_path, depth, Span};
+
+/// Emits an event at an explicit [`Level`]; the message formats lazily
+/// (only when some sink would accept the event).
+#[macro_export]
+macro_rules! tele_log {
+    ($level:expr, $target:expr, $($arg:tt)+) => {
+        if $crate::telemetry::enabled($level) {
+            $crate::telemetry::emit($level, $target, &format!($($arg)+));
+        }
+    };
+}
+
+/// Emits an error-level event.
+#[macro_export]
+macro_rules! tele_error {
+    ($target:expr, $($arg:tt)+) => {
+        $crate::tele_log!($crate::telemetry::Level::Error, $target, $($arg)+)
+    };
+}
+
+/// Emits a warn-level event.
+#[macro_export]
+macro_rules! tele_warn {
+    ($target:expr, $($arg:tt)+) => {
+        $crate::tele_log!($crate::telemetry::Level::Warn, $target, $($arg)+)
+    };
+}
+
+/// Emits an info-level event.
+#[macro_export]
+macro_rules! tele_info {
+    ($target:expr, $($arg:tt)+) => {
+        $crate::tele_log!($crate::telemetry::Level::Info, $target, $($arg)+)
+    };
+}
+
+/// Emits a debug-level event.
+#[macro_export]
+macro_rules! tele_debug {
+    ($target:expr, $($arg:tt)+) => {
+        $crate::tele_log!($crate::telemetry::Level::Debug, $target, $($arg)+)
+    };
+}
+
+/// Emits a trace-level event.
+#[macro_export]
+macro_rules! tele_trace {
+    ($target:expr, $($arg:tt)+) => {
+        $crate::tele_log!($crate::telemetry::Level::Trace, $target, $($arg)+)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macros_compile_and_respect_levels() {
+        init_from_env();
+        crate::tele_error!("telemetry.test", "count = {}", 1);
+        crate::tele_warn!("telemetry.test", "count = {}", 2);
+        crate::tele_info!("telemetry.test", "plain");
+        crate::tele_debug!("telemetry.test", "x={x}", x = 3);
+        crate::tele_trace!("telemetry.test", "deep");
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().counter("telemetry.mod.test").add(2);
+        assert!(global().snapshot().counters["telemetry.mod.test"] >= 2);
+    }
+}

@@ -1,0 +1,201 @@
+//! Event sinks: the leveled stderr logger and the optional JSONL trace
+//! file.
+//!
+//! Configuration is environment-driven so the binary, the benches and
+//! the tests share one switch:
+//!
+//! * `PALLAS_LOG=error|warn|info|debug|trace` — stderr verbosity
+//!   (default `warn`; anything unparsable falls back to `warn`).
+//! * `PALLAS_LOG_JSON=path.jsonl` — additionally append every emitted
+//!   event as one JSON object per line (machine-readable traces).
+//!
+//! The vendored crate set has no `log`/`tracing`, so this is the
+//! crate's logging facade; the [`crate::tele_debug!`]-family macros
+//! route here. Events below the configured level cost one relaxed
+//! atomic load.
+
+use crate::coordinator::protocol::Json;
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Event severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or data-loss conditions.
+    Error = 0,
+    /// Suspicious but handled conditions.
+    Warn = 1,
+    /// High-level lifecycle events.
+    Info = 2,
+    /// Per-operation detail (spans, steps, requests).
+    Debug = 3,
+    /// Inner-loop detail (gap checks, batch contents).
+    Trace = 4,
+}
+
+impl Level {
+    /// Parses a level name (case-insensitive). `off` disables stderr.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// Display name (fixed 5 columns for aligned stderr output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// `u8::MAX` marks "stderr disabled" (PALLAS_LOG=off).
+const STDERR_OFF: u8 = u8::MAX;
+
+struct Sinks {
+    stderr_level: AtomicU8,
+    json: Option<Mutex<std::fs::File>>,
+}
+
+fn sinks() -> &'static Sinks {
+    static SINKS: OnceLock<Sinks> = OnceLock::new();
+    SINKS.get_or_init(|| {
+        let stderr_level = match std::env::var("PALLAS_LOG") {
+            Ok(v) if v.trim().eq_ignore_ascii_case("off") => STDERR_OFF,
+            Ok(v) => Level::parse(&v).unwrap_or(Level::Warn) as u8,
+            Err(_) => Level::Warn as u8,
+        };
+        let json = std::env::var("PALLAS_LOG_JSON").ok().and_then(|path| {
+            OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .map_err(|e| eprintln!("telemetry: cannot open {path}: {e}"))
+                .ok()
+                .map(Mutex::new)
+        });
+        Sinks { stderr_level: AtomicU8::new(stderr_level), json }
+    })
+}
+
+/// Reads `PALLAS_LOG`/`PALLAS_LOG_JSON` and installs the sinks. Called
+/// by `main`; safe (and idempotent) to call from tests and benches —
+/// first caller wins, matching `OnceLock` semantics.
+pub fn init_from_env() {
+    let _ = sinks();
+}
+
+/// Overrides the stderr level at runtime (CLI `--log` flag).
+pub fn set_stderr_level(level: Option<Level>) {
+    sinks()
+        .stderr_level
+        .store(level.map(|l| l as u8).unwrap_or(STDERR_OFF), Ordering::Relaxed);
+}
+
+/// Whether an event at `level` would reach any sink. Use to guard
+/// expensive formatting: `if enabled(Level::Trace) { ... }`.
+pub fn enabled(level: Level) -> bool {
+    let s = sinks();
+    let stderr_on = match s.stderr_level.load(Ordering::Relaxed) {
+        STDERR_OFF => false,
+        max => level <= Level::from_u8(max),
+    };
+    stderr_on || s.json.is_some()
+}
+
+/// Emits a plain message event.
+pub fn emit(level: Level, target: &str, msg: &str) {
+    emit_with(level, target, msg, None);
+}
+
+/// Emits an event with optional structured `fields` (JSONL sink only;
+/// the stderr line stays human-oriented).
+pub fn emit_with(level: Level, target: &str, msg: &str, fields: Option<&Json>) {
+    let s = sinks();
+    let ts = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let span = super::span::current_path();
+    let stderr_max = s.stderr_level.load(Ordering::Relaxed);
+    if stderr_max != STDERR_OFF && level <= Level::from_u8(stderr_max) {
+        let indent = "  ".repeat(super::span::depth());
+        let span_note =
+            if span.is_empty() { String::new() } else { format!(" [{span}]") };
+        eprintln!("[{:13.3} {}] {indent}{target}{span_note}: {msg}", ts, level.name());
+    }
+    if let Some(file) = &s.json {
+        let mut obj = vec![
+            ("ts", Json::Num(ts)),
+            ("level", Json::Str(level.name().trim().to_ascii_lowercase())),
+            ("target", Json::Str(target.to_string())),
+            ("msg", Json::Str(msg.to_string())),
+        ];
+        if !span.is_empty() {
+            obj.push(("span", Json::Str(span)));
+        }
+        if let Some(f) = fields {
+            obj.push(("fields", f.clone()));
+        }
+        let line = Json::obj(obj).encode();
+        let mut guard = file.lock().unwrap();
+        let _ = writeln!(guard, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_u8(Level::Debug as u8), Level::Debug);
+    }
+
+    #[test]
+    fn runtime_level_override_gates_enabled() {
+        init_from_env();
+        set_stderr_level(Some(Level::Error));
+        // Error must always be visible on stderr.
+        assert!(enabled(Level::Error));
+        set_stderr_level(Some(Level::Trace));
+        assert!(enabled(Level::Trace));
+        // emit must not panic at any level
+        emit(Level::Trace, "test", "trace event");
+        emit_with(
+            Level::Error,
+            "test",
+            "structured",
+            Some(&Json::obj(vec![("k", Json::Num(1.0))])),
+        );
+        // restore a quiet default for the rest of the test binary
+        set_stderr_level(Some(Level::Warn));
+    }
+}

@@ -1,0 +1,163 @@
+//! Structured spans: RAII guards that record nested wall-time.
+//!
+//! A [`Span`] measures the wall-clock time between [`Span::enter`] and
+//! drop, records it into the global histogram `<name>.seconds`, and
+//! emits paired `begin`/`end` debug events so `PALLAS_LOG=debug` shows
+//! an indented trace of the nesting. The per-thread span stack gives
+//! every event its enclosing span path (`path.run/path.solve`), which
+//! the JSONL sink records verbatim.
+//!
+//! Spans replace the raw `Instant`/`Stopwatch` timing that used to be
+//! scattered through `path/runner.rs` and `coordinator/server.rs`:
+//! the same reading is now *also* a named metric, for free.
+
+use super::metrics;
+use super::sink::{self, Level};
+use std::cell::RefCell;
+use std::time::Instant;
+
+thread_local! {
+    static STACK: RefCell<Vec<String>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Current nesting depth on this thread.
+pub fn depth() -> usize {
+    STACK.with(|s| s.borrow().len())
+}
+
+/// The enclosing span path on this thread, `/`-joined (empty at top
+/// level).
+pub fn current_path() -> String {
+    STACK.with(|s| s.borrow().join("/"))
+}
+
+/// An RAII wall-time span. Construct with [`Span::enter`]; the drop
+/// records `<name>.seconds` into the [global registry](metrics::global).
+#[derive(Debug)]
+pub struct Span {
+    name: String,
+    label: Option<String>,
+    start: Instant,
+    armed: bool,
+}
+
+impl Span {
+    /// Opens a span named `name` (dotted-metric style, e.g.
+    /// `"path.solve"`).
+    pub fn enter(name: impl Into<String>) -> Span {
+        Span::enter_labeled(name, None::<String>)
+    }
+
+    /// Opens a span with a free-form label carried on its events (e.g.
+    /// the λ being solved). Labels do not affect the metric name.
+    pub fn enter_labeled(
+        name: impl Into<String>,
+        label: Option<impl Into<String>>,
+    ) -> Span {
+        let name = name.into();
+        let label = label.map(Into::into);
+        if sink::enabled(Level::Debug) {
+            match &label {
+                Some(l) => sink::emit(Level::Debug, &name, &format!("begin ({l})")),
+                None => sink::emit(Level::Debug, &name, "begin"),
+            }
+        }
+        STACK.with(|s| s.borrow_mut().push(name.clone()));
+        Span { name, label, start: Instant::now(), armed: true }
+    }
+
+    /// Seconds elapsed so far (the span keeps running).
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Closes the span now and returns the elapsed seconds — for call
+    /// sites that also need the reading (e.g. `PathStep` fields).
+    pub fn finish(mut self) -> f64 {
+        self.close()
+    }
+
+    fn close(&mut self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if self.armed {
+            self.armed = false;
+            STACK.with(|s| {
+                let mut stack = s.borrow_mut();
+                // Pop our own frame. Spans are almost always dropped in
+                // LIFO order; if a caller held one across scopes, remove
+                // the deepest matching frame instead of corrupting the
+                // stack.
+                if let Some(i) = stack.iter().rposition(|n| n == &self.name) {
+                    stack.remove(i);
+                }
+            });
+            metrics::global()
+                .histogram(&format!("{}.seconds", self.name))
+                .record(secs);
+            if sink::enabled(Level::Debug) {
+                let lbl = self
+                    .label
+                    .as_deref()
+                    .map(|l| format!(" ({l})"))
+                    .unwrap_or_default();
+                sink::emit(
+                    Level::Debug,
+                    &self.name,
+                    &format!("end{lbl} {}", crate::report::timer::fmt_duration(secs)),
+                );
+            }
+        }
+        secs
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_records_into_global_histogram() {
+        let before = metrics::global().histogram("test.span.seconds").count();
+        {
+            let s = Span::enter("test.span");
+            assert!(s.elapsed_seconds() >= 0.0);
+        }
+        let after = metrics::global().histogram("test.span.seconds").count();
+        assert_eq!(after, before + 1);
+    }
+
+    #[test]
+    fn nesting_tracks_depth_and_path() {
+        assert_eq!(depth(), 0);
+        let outer = Span::enter("test.outer");
+        assert_eq!(depth(), 1);
+        {
+            let _inner = Span::enter_labeled("test.inner", Some("k=1"));
+            assert_eq!(depth(), 2);
+            assert_eq!(current_path(), "test.outer/test.inner");
+        }
+        assert_eq!(depth(), 1);
+        assert_eq!(current_path(), "test.outer");
+        let secs = outer.finish();
+        assert!(secs >= 0.0);
+        assert_eq!(depth(), 0);
+    }
+
+    #[test]
+    fn finish_returns_seconds_once() {
+        let before = metrics::global().histogram("test.once.seconds").count();
+        let s = Span::enter("test.once");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = s.finish();
+        assert!(secs >= 0.001, "{secs}");
+        // finish consumed the span; exactly one sample recorded
+        let after = metrics::global().histogram("test.once.seconds").count();
+        assert_eq!(after, before + 1);
+    }
+}

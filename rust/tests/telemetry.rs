@@ -1,0 +1,115 @@
+//! End-to-end telemetry: the acceptance workload for the in-tree
+//! observability layer.
+//!
+//! Drives a solve + screen workload through the TCP service, then
+//! checks the `{"cmd":"stats"}` round-trip reports nonzero request
+//! counters and latency percentiles — the live-stats surface the
+//! server exposes over the wire. Also hammers the global registry from
+//! the coordinator's own thread pool to prove the lock-cheap counters
+//! aggregate correctly under contention.
+
+use svmscreen::coordinator::pool::parallel_map;
+use svmscreen::coordinator::protocol::Json;
+use svmscreen::coordinator::server::{Client, ScreeningServer, ServerConfig};
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::svm::problem::Problem;
+
+fn cmd(name: &str) -> Json {
+    Json::obj(vec![("cmd", Json::Str(name.into()))])
+}
+
+#[test]
+fn stats_roundtrip_reports_live_workload() {
+    let p = Problem::from_dataset(&SynthSpec::text(80, 300, 301).generate());
+    let server = ScreeningServer::start(p, ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+
+    let info = c.request(&cmd("info")).unwrap();
+    let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+
+    // Workload: one solve (moves the dual point), several screens.
+    let sol = c
+        .request(&Json::obj(vec![
+            ("cmd", Json::Str("solve".into())),
+            ("lambda", Json::Num(0.7 * lmax)),
+        ]))
+        .unwrap();
+    assert_eq!(sol.get("ok"), Some(&Json::Bool(true)), "{sol:?}");
+    for frac in [0.6, 0.5, 0.4] {
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(frac * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+    }
+
+    let stats = c.request(&cmd("stats")).unwrap();
+    assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats:?}");
+
+    // Server-local counters: exactly this workload.
+    assert_eq!(stats.get("solves").unwrap().as_f64(), Some(1.0));
+    assert_eq!(stats.get("screens").unwrap().as_f64(), Some(3.0));
+    assert!(stats.get("batches").unwrap().as_f64().unwrap() >= 1.0);
+
+    // Registry metrics: nonzero request counters...
+    let metrics = stats.get("metrics").unwrap();
+    let counters = metrics.get("counters").unwrap();
+    for key in ["server.requests", "server.connections", "server.batches"] {
+        let v = counters.get(key).unwrap().as_f64().unwrap();
+        assert!(v >= 1.0, "{key} = {v}");
+    }
+    // ...and latency percentiles from real observations. The registry
+    // is process-global (other tests may add to it), so bounds only.
+    let hists = metrics.get("histograms").unwrap();
+    for key in ["server.screen.seconds", "server.solve.seconds"] {
+        let h = hists.get(key).unwrap();
+        let count = h.get("count").unwrap().as_f64().unwrap();
+        assert!(count >= 1.0, "{key} count = {count}");
+        let p50 = h.get("p50").unwrap().as_f64().unwrap();
+        let p99 = h.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0, "{key} p50 = {p50}");
+        assert!(p99 >= p50, "{key} p99 {p99} < p50 {p50}");
+    }
+    // Solver/screening layers fired underneath the service.
+    assert!(counters.get("solver.cd.solves").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(
+        counters
+            .get("screening.paper.sweeps")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            >= 1.0
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn registry_counters_sum_under_pool_contention() {
+    let tele = svmscreen::telemetry::global();
+    let before = tele.counter("test.pool.contention").get();
+    let items: Vec<usize> = (0..64).collect();
+    let adds = parallel_map(&items, 8, |&i| {
+        let c = svmscreen::telemetry::global().counter("test.pool.contention");
+        for _ in 0..500 {
+            c.inc();
+        }
+        c.add(i as u64);
+        500 + i as u64
+    });
+    let expected: u64 = adds.iter().sum();
+    let after = tele.counter("test.pool.contention").get();
+    assert_eq!(after - before, expected);
+
+    // Histograms under the same contention: every record lands.
+    let hist_before = tele.histogram("test.pool.hist").count();
+    parallel_map(&items, 8, |&i| {
+        svmscreen::telemetry::global()
+            .histogram("test.pool.hist")
+            .record(1e-6 * (i + 1) as f64);
+    });
+    let hist_after = tele.histogram("test.pool.hist").count();
+    assert_eq!(hist_after - hist_before, 64);
+}
