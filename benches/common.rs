@@ -46,3 +46,12 @@ pub fn banner(id: &str, what: &str) {
     println!("{id}: {what}");
     println!("================================================================");
 }
+
+/// Emits the standardized `BENCH_<id>.json` artifact (schema
+/// `pallas.bench.v1`). A write failure is reported but never fails the
+/// bench — the human-readable tables above are the primary output.
+pub fn emit_artifact(art: svmscreen::report::bench::BenchArtifact) {
+    if let Err(e) = art.write() {
+        eprintln!("[bench] artifact not written: {e}");
+    }
+}

@@ -11,7 +11,9 @@ use svmscreen::report::table::Table;
 
 fn main() {
     common::banner("F1", "rejection ratio along the regularization path");
+    let bench_t0 = std::time::Instant::now();
     let mut csv: Vec<Vec<String>> = Vec::new();
+    let mut paper_rej: Vec<f64> = Vec::new();
     for ds in common::dataset_trio(1.0) {
         let p = Problem::from_dataset(&ds);
         let grid = geometric(p.lambda_max(), 0.05, 30);
@@ -19,6 +21,9 @@ fn main() {
         for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere] {
             let rep = run_path(&p, &grid, &PathConfig { rule, ..Default::default() })
                 .expect("path");
+            if rule == RuleKind::Paper {
+                paper_rej.push(rep.totals().mean_rejection);
+            }
             series.push((rule, rep.steps.iter().map(|s| s.rejection).collect()));
         }
         let mut t = Table::new(
@@ -52,5 +57,17 @@ fn main() {
         "f1_rejection",
         &["dataset", "lambda_frac", "paper", "ball", "sphere"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "f1",
+            "trio scale=1.0, 30-step path to 0.05 lmax, rules=paper/ball/sphere",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(paper_rej.iter().sum::<f64>() / paper_rej.len().max(1) as f64)
+        .extra(
+            "csv_rows",
+            svmscreen::coordinator::protocol::Json::Num(csv.len() as f64),
+        ),
     );
 }

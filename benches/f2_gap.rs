@@ -11,6 +11,7 @@ use svmscreen::screening::rule::screen_all;
 
 fn main() {
     common::banner("F2", "screening power vs lambda1/lambda2 gap");
+    let bench_t0 = std::time::Instant::now();
     let ds = svmscreen::data::synth::SynthSpec::text(500, 3000, 9102).generate();
     let p = Problem::from_dataset(&ds);
     let lambda1 = 0.7 * p.lambda_max();
@@ -22,6 +23,8 @@ fn main() {
     );
     let mut csv = Vec::new();
     let mut prev_paper = 1.0f64;
+    let mut paper_sum = 0.0f64;
+    let mut paper_n = 0usize;
     for pct in [99, 97, 95, 90, 85, 80, 70, 60, 50, 40, 30] {
         let frac = pct as f64 / 100.0;
         let lambda2 = frac * lambda1;
@@ -32,6 +35,8 @@ fn main() {
             let rep = screen_all(rule, &p.x, &p.y, &theta1, lambda1, lambda2).unwrap();
             if rule == RuleKind::Paper {
                 paper_rej = rep.rejection_ratio();
+                paper_sum += paper_rej;
+                paper_n += 1;
             }
             cells.push(format!("{:.3}", rep.rejection_ratio()));
             row.push(format!("{:.6}", rep.rejection_ratio()));
@@ -50,5 +55,13 @@ fn main() {
         "f2_gap",
         &["lambda2_over_lambda1", "paper", "ball", "sphere", "strong"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "f2",
+            "text 500x3000, lambda1=0.7 lmax, gap sweep 0.99..0.30, all rules",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(paper_sum / paper_n.max(1) as f64),
     );
 }

@@ -12,6 +12,7 @@ use svmscreen::report::table::Table;
 
 fn main() {
     common::banner("F3", "per-lambda screen/solve time breakdown");
+    let bench_t0 = std::time::Instant::now();
     let ds = svmscreen::data::synth::SynthSpec::text(1000, 10000, 9103).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
@@ -64,5 +65,14 @@ fn main() {
         "f3_breakdown",
         &["lambda_frac", "screen_s", "solve_screened_s", "solve_full_s"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "f3",
+            "text 1000x10000, 30-step path to 0.05 lmax, paper vs none",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(tw.mean_rejection)
+        .speedup(to.solve_seconds / (tw.screen_seconds + tw.solve_seconds)),
     );
 }

@@ -14,6 +14,7 @@ use svmscreen::solver::reduced::ReducedProblem;
 
 fn main() {
     common::banner("F4", "duality-gap convergence: full vs screened problem");
+    let bench_t0 = std::time::Instant::now();
     let ds = svmscreen::data::synth::SynthSpec::dense(400, 800, 9104).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
@@ -69,4 +70,13 @@ fn main() {
     );
     assert!(scr_time <= full_time, "screened solve should be faster");
     common::write_csv("f4_convergence", &["epoch", "full", "screened"], &csv);
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "f4",
+            "dense 400x800, lambda2=0.30 lmax, cd to gap 1e-10",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(screen.rejection_ratio())
+        .speedup(full_time / scr_time.max(1e-12)),
+    );
 }

@@ -13,6 +13,7 @@ use svmscreen::screening::rule::screen_all;
 
 fn main() {
     common::banner("F5", "path anatomy: kept vs active vs screened");
+    let bench_t0 = std::time::Instant::now();
     let ds = svmscreen::data::synth::SynthSpec::text(600, 5000, 9108).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
@@ -73,5 +74,17 @@ fn main() {
         "f5_path_profile",
         &["lambda_frac", "screened", "kept", "nnz"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "f5",
+            "text 600x5000, 25-step path to 0.05 lmax, paper rule",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(rep.totals().mean_rejection)
+        .extra(
+            "steps",
+            svmscreen::coordinator::protocol::Json::Num(rep.steps.len() as f64),
+        ),
     );
 }

@@ -14,6 +14,9 @@ use svmscreen::solver::api::SolverKind;
 
 fn main() {
     common::banner("T1", "end-to-end path speedup per rule and solver");
+    let bench_t0 = std::time::Instant::now();
+    let mut paper_speedups: Vec<f64> = Vec::new();
+    let mut paper_rejections: Vec<f64> = Vec::new();
     let mut t = Table::new(
         "T1: 30-step path to 0.05 lmax",
         &["dataset", "solver", "rule", "total_s", "screen_s", "mean_rej%", "violations", "speedup"],
@@ -42,6 +45,10 @@ fn main() {
                     baseline = Some(total);
                 }
                 let speedup = baseline.unwrap() / total;
+                if rule == RuleKind::Paper {
+                    paper_speedups.push(speedup);
+                    paper_rejections.push(totals.mean_rejection);
+                }
                 t.row(&[
                     ds.name.clone(),
                     solver.name().into(),
@@ -71,11 +78,18 @@ fn main() {
         &["dataset", "solver", "rule", "total_s", "screen_s", "mean_rejection", "violations", "speedup"],
         &csv,
     );
-    // Machine-readable artifact: the full telemetry snapshot of the run
-    // (path/solver/screening counters, latency percentiles).
-    let snapshot = svmscreen::telemetry::global().snapshot().to_json().encode();
-    match std::fs::write("BENCH_t1.json", &snapshot) {
-        Ok(()) => println!("wrote BENCH_t1.json ({} bytes)", snapshot.len()),
-        Err(e) => eprintln!("BENCH_t1.json not written: {e}"),
-    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t1",
+            "trio scale=1.0, 30-step path to 0.05 lmax, all rules x cd/fista",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(mean(&paper_rejections))
+        .speedup(mean(&paper_speedups))
+        .extra(
+            "runs",
+            svmscreen::coordinator::protocol::Json::Num(csv.len() as f64),
+        ),
+    );
 }

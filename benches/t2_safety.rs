@@ -21,6 +21,9 @@ fn quantile(sorted: &[f64], q: f64) -> f64 {
 
 fn main() {
     common::banner("T2", "safety audit + bound tightness vs certified optima");
+    let bench_t0 = std::time::Instant::now();
+    let mut paper_checked = 0usize;
+    let mut paper_screened = 0usize;
     let mut t = Table::new(
         "T2: screening from lambda1 = 0.8 lmax (solved to 1e-10)",
         &["dataset", "rule", "checked", "screened", "violations", "slack p50", "slack p90"],
@@ -73,6 +76,10 @@ fn main() {
             if rule.is_safe() {
                 safe_violations += violations;
             }
+            if rule == RuleKind::Paper {
+                paper_checked += checked;
+                paper_screened += screened;
+            }
             slacks.sort_by(|a, b| a.partial_cmp(b).unwrap());
             t.row(&[
                 ds.name.clone(),
@@ -112,5 +119,17 @@ fn main() {
         "t2_safety",
         &["dataset", "rule", "checked", "screened", "violations", "slack_p50", "slack_p90"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t2",
+            "trio scale=0.6, lambda1=0.8 lmax, 5-frac ladder, all rules vs 1e-10 optima",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(paper_screened as f64 / paper_checked.max(1) as f64)
+        .extra(
+            "safe_violations",
+            svmscreen::coordinator::protocol::Json::Num(safe_violations as f64),
+        ),
     );
 }

@@ -16,6 +16,8 @@ use svmscreen::screening::rule::screen_all;
 
 fn main() {
     common::banner("T3", "ablation of K + KKT case mix");
+    let bench_t0 = std::time::Instant::now();
+    let mut paper_rej: Vec<f64> = Vec::new();
     let ds = svmscreen::data::synth::SynthSpec::text(500, 3000, 9105).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
@@ -87,6 +89,7 @@ fn main() {
             format!("{:.6}", improved as f64 / p.m() as f64),
         ]);
         assert!(rej[2] >= rej[1] - 1e-9 && rej[1] >= rej[0] - 1e-9, "ordering");
+        paper_rej.push(rej[2]);
     }
     println!("{t}");
     println!(
@@ -98,5 +101,13 @@ fn main() {
         "t3_ablation",
         &["lambda1_frac", "sphere", "ball", "paper", "plane_case_frac", "improved_frac"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t3",
+            "text 500x3000, lambda2=0.9 lambda1, sphere/ball/paper ablation",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .mean_rejection(paper_rej.iter().sum::<f64>() / paper_rej.len().max(1) as f64),
     );
 }

@@ -16,6 +16,8 @@ use svmscreen::screening::rule::screen_all;
 
 fn main() {
     common::banner("T4", "screening throughput by engine and size");
+    let bench_t0 = std::time::Instant::now();
+    let mut par8_speedups: Vec<f64> = Vec::new();
     let engine = {
         let dir = PjrtEngine::default_dir();
         if dir.exists() {
@@ -80,6 +82,9 @@ fn main() {
                 )
                 .unwrap();
             });
+            if workers == 8 {
+                par8_speedups.push(native.median() / par.median().max(1e-12));
+            }
             row.push(format!("{:.0}", thru(par.median())));
             csv_row.push(format!("{:.1}", thru(par.median())));
         }
@@ -113,5 +118,18 @@ fn main() {
         "t4_throughput",
         &["n", "m", "native_fps", "par2_fps", "par4_fps", "par8_fps", "pjrt_fps"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t4",
+            "5 problem sizes, paper rule, native vs par x2/4/8 vs pjrt(interp)",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        // headline speedup: parallel x8 over native, averaged over sizes
+        .speedup(par8_speedups.iter().sum::<f64>() / par8_speedups.len().max(1) as f64)
+        .extra(
+            "pjrt_available",
+            svmscreen::coordinator::protocol::Json::Bool(engine.is_some()),
+        ),
     );
 }

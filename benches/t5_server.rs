@@ -16,6 +16,9 @@ use svmscreen::report::timer::BenchStats;
 
 fn main() {
     common::banner("T5", "screening service: batching vs latency/throughput");
+    let bench_t0 = std::time::Instant::now();
+    let mut best_rps = 0.0f64;
+    let mut total_reqs = 0u64;
     let ds = svmscreen::data::synth::SynthSpec::text(500, 5000, 9107).generate();
     println!("workload: {}", ds.describe());
 
@@ -86,6 +89,8 @@ fn main() {
             let stats = BenchStats::from_samples(lats);
             let (screens, batches, _) = server.metrics();
             let mean_batch = screens as f64 / batches.max(1) as f64;
+            best_rps = best_rps.max(screens as f64 / wall);
+            total_reqs += screens;
             t.row(&[
                 window_ms.to_string(),
                 clients.to_string(),
@@ -112,5 +117,20 @@ fn main() {
         "t5_server",
         &["window_ms", "clients", "mean_batch", "lat_p50_s", "lat_p90_s", "req_per_s"],
         &csv,
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t5",
+            "text 500x5000, window 0/2/8ms x clients 1/4/8, 40 reqs/client",
+        )
+        .wall_seconds(bench_t0.elapsed().as_secs_f64())
+        .extra(
+            "best_req_per_s",
+            svmscreen::coordinator::protocol::Json::Num(best_rps),
+        )
+        .extra(
+            "total_requests",
+            svmscreen::coordinator::protocol::Json::Num(total_reqs as f64),
+        ),
     );
 }

@@ -19,7 +19,7 @@ pub struct Cli {
 }
 
 /// Flags that take no value (presence ⇒ `true`).
-const SWITCHES: &[&str] = &["verbose", "indices", "no-normalize", "csv"];
+const SWITCHES: &[&str] = &["verbose", "indices", "no-normalize", "csv", "audit"];
 
 /// Parses an argument vector (without argv[0]).
 pub fn parse_args(args: &[String]) -> Result<Cli> {
@@ -66,22 +66,39 @@ COMMANDS:
             --data synth:<kind>:<n>:<m>:<seed> --out FILE
   solve     solve one lambda
             --data ... --lambda-frac 0.5 [--solver cd|fista] [--tol 1e-6]
+            [--trace-out FILE]
   screen    one screening pass (lambda_max -> lambda2)
             --data ... --lambda2-frac 0.5 [--rule paper|ball|sphere|strong]
             [--workers N] [--engine native|pjrt] [--artifacts DIR]
+            [--trace-out FILE]
   path      regularization path with sequential screening
             --data ... [--steps 30] [--min-frac 0.05] [--rule ...]
-            [--solver ...] [--tol ...] [--csv FILE]
+            [--solver ...] [--tol ...] [--csv FILE] [--trace-out FILE]
+            [--audit]
   serve     start the screening service
             --data ... [--addr 127.0.0.1:7878] [--workers N]
   help      this text
 
 Config file: --config FILE (key = value lines; CLI flags override).
 
+FLAGS:
+  --trace-out FILE  after the run, write the recorded span timeline as a
+                    Chrome trace-event JSON file (load in Perfetto or
+                    chrome://tracing)
+  --audit           safety-audit mode (path): after each step converges,
+                    re-check every screened-out feature against the KKT
+                    condition; violations are counted in
+                    screening.violations and logged as errors
+
 ENVIRONMENT:
-  PALLAS_LOG       stderr log level: error|warn|info|debug|trace|off
-                   (default warn); debug traces spans, solves, screens
-  PALLAS_LOG_JSON  path to a JSONL event sink (structured telemetry)
+  PALLAS_LOG              stderr log level: error|warn|info|debug|trace|off
+                          (default warn); debug traces spans/solves/screens
+  PALLAS_LOG_JSON         path to a JSONL event sink (structured telemetry)
+  PALLAS_TRACE_CAPACITY   trace ring capacity in records (default 16384;
+                          0 disables trace recording)
+  PALLAS_TRACE_OUT        like --trace-out, honored by benches and any run
+  PALLAS_STATS_DUMP_SECS  serve: emit a full stats snapshot through the
+                          sinks every N seconds (fractional ok)
 ";
 
 #[cfg(test)]

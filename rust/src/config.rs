@@ -104,6 +104,10 @@ pub struct RunConfig {
     pub artifact_dir: String,
     /// Server bind address.
     pub addr: String,
+    /// Chrome-trace output path (`--trace-out`), if requested.
+    pub trace_out: Option<String>,
+    /// Safety-audit mode: re-check screened features at convergence.
+    pub audit: bool,
 }
 
 impl RunConfig {
@@ -131,6 +135,8 @@ impl RunConfig {
             engine,
             artifact_dir: raw.get("artifacts").unwrap_or("artifacts").to_string(),
             addr: raw.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+            trace_out: raw.get("trace-out").map(str::to_string),
+            audit: raw.get_bool("audit", false)?,
         })
     }
 
@@ -145,6 +151,7 @@ impl RunConfig {
             rule: self.rule,
             solver: self.solver,
             solve: self.solve_options(),
+            audit: self.audit,
             ..Default::default()
         }
     }
@@ -224,6 +231,20 @@ mod tests {
         assert_eq!(cfg.solver, SolverKind::Cd);
         assert_eq!(cfg.engine, "native");
         assert!(cfg.workers >= 1);
+        assert_eq!(cfg.trace_out, None);
+        assert!(!cfg.audit);
+        assert!(!cfg.path_config().audit);
+    }
+
+    #[test]
+    fn trace_and_audit_flags_resolve() {
+        let mut raw = RawConfig::default();
+        raw.set("trace-out", "out/trace.json");
+        raw.set("audit", "true");
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
+        assert!(cfg.audit);
+        assert!(cfg.path_config().audit);
     }
 
     #[test]

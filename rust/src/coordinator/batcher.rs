@@ -5,7 +5,13 @@
 //! batcher collects requests for up to `max_batch` items or
 //! `window` (whichever first), and the executor screens the whole batch
 //! in one pass via [`crate::screening::rule::screen_multi`].
+//!
+//! Every flushed batch reports its item count and in-memory payload
+//! size into count-scale histograms (`coordinator.batch.items`,
+//! `coordinator.batch.bytes`) so `{"cmd":"stats"}` shows how well the
+//! amortization is working under real load.
 
+use crate::telemetry::{self, BucketSpec};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -46,7 +52,22 @@ pub fn next_batch<R>(rx: &Receiver<R>, policy: &BatchPolicy) -> Vec<R> {
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    record_batch_telemetry(&batch);
     batch
+}
+
+/// Meters one flushed batch: item count plus approximate payload bytes
+/// (`len * size_of::<R>()` — shallow, but proportional to queue memory
+/// for the fixed-size request structs the server batches).
+fn record_batch_telemetry<R>(batch: &[R]) {
+    if batch.is_empty() {
+        return;
+    }
+    let tele = telemetry::global();
+    tele.histogram_with("coordinator.batch.items", BucketSpec::COUNTS)
+        .record(batch.len() as f64);
+    tele.histogram_with("coordinator.batch.bytes", BucketSpec::COUNTS)
+        .record((batch.len() * std::mem::size_of::<R>()) as f64);
 }
 
 #[cfg(test)]
@@ -84,6 +105,27 @@ mod tests {
         drop(tx);
         let b = next_batch(&rx, &BatchPolicy::default());
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batches_record_count_scale_histograms() {
+        let (tx, rx) = channel();
+        for i in 0..6u64 {
+            tx.send(i).unwrap();
+        }
+        let tele = crate::telemetry::global();
+        let before = tele.histogram("coordinator.batch.items").count();
+        let policy = BatchPolicy { max_batch: 6, window: Duration::from_secs(5) };
+        let b = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 6);
+        // Global histogram: sibling tests may record concurrently.
+        let items = tele.histogram("coordinator.batch.items");
+        assert!(items.count() >= before + 1);
+        // The histograms must carry the count-scale bucket layout: a
+        // seconds-scale histogram would clamp a 6-item batch badly.
+        assert_eq!(items.spec(), crate::telemetry::BucketSpec::COUNTS);
+        let bytes = tele.histogram("coordinator.batch.bytes").snapshot();
+        assert!(bytes.max >= (6 * std::mem::size_of::<u64>()) as f64);
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! Thread-pool substrate (std threads; no tokio/rayon offline).
+//!
+//! Both entry points capture the submitting thread's span path
+//! ([`telemetry::current_path`]) and re-adopt it on the worker
+//! ([`telemetry::adopt_path`]), so spans opened inside pooled work nest
+//! under their logical parent in exported traces instead of collapsing
+//! to depth 0 on an anonymous thread.
 
+use crate::telemetry;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -18,12 +25,19 @@ where
     if workers <= 1 || n <= 1 {
         return items.iter().map(&f).collect();
     }
+    let parent_path = telemetry::current_path();
     let counter = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     std::thread::scope(|s| {
+        // Shared-by-reference captures for the `move` closures below
+        // (only the Copy references move, not the values).
+        let counter = &counter;
+        let f = &f;
+        let parent_path = parent_path.as_str();
         let handles: Vec<_> = (0..workers)
             .map(|_| {
-                s.spawn(|| {
+                s.spawn(move || {
+                    let _attribution = telemetry::adopt_path(parent_path);
                     let mut local = Vec::new();
                     loop {
                         let i = counter.fetch_add(1, Ordering::Relaxed);
@@ -77,12 +91,18 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), handles }
     }
 
-    /// Enqueues a job.
+    /// Enqueues a job. The submitter's span path travels with it: the
+    /// worker adopts it for the job's duration, so spans the job opens
+    /// keep their logical nesting in exported traces.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let parent_path = telemetry::current_path();
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(Box::new(move || {
+                let _attribution = telemetry::adopt_path(&parent_path);
+                f()
+            }))
             .expect("pool workers gone");
     }
 
@@ -160,5 +180,33 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn pooled_work_inherits_span_attribution() {
+        use crate::telemetry::{current_path, Span};
+        let _outer = Span::enter("test.pool.parent");
+        // parallel_map workers adopt the submitter's span path.
+        let paths = parallel_map(&[0, 1, 2, 3], 2, |_| current_path());
+        for p in &paths {
+            assert!(p.starts_with("test.pool.parent"), "got {p:?}");
+        }
+        // ThreadPool jobs adopt the path captured at execute() time.
+        let (tx, rx) = mpsc::channel();
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..4 {
+                let tx = tx.clone();
+                pool.execute(move || {
+                    let _ = tx.send(current_path());
+                });
+            }
+            drop(tx);
+        }
+        let seen: Vec<String> = rx.iter().collect();
+        assert_eq!(seen.len(), 4);
+        for p in &seen {
+            assert!(p.starts_with("test.pool.parent"), "got {p:?}");
+        }
     }
 }

@@ -17,8 +17,10 @@
 //! | `{"cmd":"solve","lambda":x}` | solves at `x`, updates the dual point |
 //! | `{"cmd":"screen","lambda2":x}` | batched screening vs the current point |
 //! | `{"cmd":"screen","lambda2":x,"indices":true}` | … plus kept indices |
-//! | `{"cmd":"stats"}` | live telemetry snapshot: request counters, latency percentiles, batching stats |
+//! | `{"cmd":"stats"}` | live telemetry snapshot: request counters, latency percentiles, batching stats, per-λ screening efficacy |
 //! | `{"cmd":"stats","prometheus":true}` | … plus a Prometheus text rendering under `"prometheus"` |
+//! | `{"cmd":"trace"}` | drains the trace ring: buffered span/instant records as JSON (plus `dropped` count) |
+//! | `{"cmd":"trace","chrome":true}` | … records wrapped as a Chrome trace-event document under `"chrome"` |
 //! | `{"cmd":"quit"}` | closes the connection |
 //!
 //! Every response carries `"ok"`; errors come back as
@@ -487,6 +489,27 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
             }
             Json::obj(fields)
         }
+        "trace" => {
+            // Drain: trace records are delivered at most once, so a
+            // periodic scraper sees each span exactly one time.
+            let ring = crate::telemetry::trace::recorder();
+            let dropped = ring.dropped();
+            let records = ring.drain();
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("count", Json::Num(records.len() as f64)),
+                ("dropped", Json::Num(dropped as f64)),
+            ];
+            if matches!(req.get("chrome"), Some(Json::Bool(true))) {
+                fields.push(("chrome", crate::telemetry::trace::chrome_trace(&records)));
+            } else {
+                fields.push((
+                    "records",
+                    Json::Arr(records.iter().map(|r| r.to_json()).collect()),
+                ));
+            }
+            Json::obj(fields)
+        }
         other => err_json(&format!("unknown cmd {other:?}")),
     }
 }
@@ -665,6 +688,48 @@ mod tests {
         let text = stats.get("prometheus").unwrap().as_str().unwrap();
         assert!(text.contains("server_requests_total"), "{text}");
         assert!(text.contains("quantile=\"0.99\""), "{text}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn trace_command_drains_ring_over_the_wire() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        // One screen -> at least one server.batch span lands in the ring
+        // before the reply is sent.
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.7 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let trace =
+            c.request(&Json::obj(vec![("cmd", Json::Str("trace".into()))])).unwrap();
+        assert_eq!(trace.get("ok"), Some(&Json::Bool(true)), "{trace:?}");
+        let records = trace.get("records").unwrap().as_arr().unwrap();
+        assert!(
+            records.len() as f64 == trace.get("count").unwrap().as_f64().unwrap()
+        );
+        assert!(
+            records.iter().any(|r| {
+                r.get("name").and_then(|n| n.as_str()) == Some("server.batch")
+            }),
+            "expected a server.batch span in {records:?}"
+        );
+        // Chrome-document variant: well-formed even on an empty ring.
+        let chrome = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("trace".into())),
+                ("chrome", Json::Bool(true)),
+            ]))
+            .unwrap();
+        assert_eq!(chrome.get("ok"), Some(&Json::Bool(true)));
+        assert!(chrome.get("records").is_none());
+        let doc = chrome.get("chrome").unwrap();
+        assert!(doc.get("traceEvents").unwrap().as_arr().is_some());
         server.shutdown();
     }
 

@@ -49,10 +49,35 @@
 //!   requests.
 //! * **`PALLAS_LOG_JSON`** = `path.jsonl` — append every event as one
 //!   JSON object per line (machine-readable traces).
+//! * **`PALLAS_TRACE_CAPACITY`** = `N` — trace-ring capacity in records
+//!   (default 16384; `0` disables the recorder).
+//! * **`PALLAS_TRACE_OUT`** = `trace.json` — write the recorded span
+//!   timeline as a Chrome trace-event file (benches and any run).
+//! * **`PALLAS_STATS_DUMP_SECS`** = `N` — `serve` only: emit a full
+//!   stats snapshot through the sinks every N seconds
+//!   ([`telemetry::start_stats_dump_from_env`]).
+//!
+//! Beyond aggregate metrics, a bounded trace ring
+//! ([`telemetry::trace`]) captures every completed span (name, label,
+//! start, duration, thread, nesting depth) plus warn/error instants.
+//! Three surfaces drain it: the `--trace-out FILE` CLI flag (Chrome
+//! trace-event JSON, loadable in Perfetto or `chrome://tracing`), the
+//! `{"cmd":"trace"}` protocol command (raw records, or the Chrome
+//! document with `"chrome":true`), and `PALLAS_TRACE_OUT` for benches.
 //!
 //! The screening service exposes the live registry over the wire via
 //! the `{"cmd":"stats"}` protocol command (JSON snapshot, optionally a
 //! Prometheus text rendering — see [`report::prometheus`]).
+//!
+//! ## Safety audit
+//!
+//! `path --audit` (or [`path::runner::PathConfig::audit`]) re-checks
+//! every screened-out feature against the KKT inactivity condition
+//! `|θᵀf̂ⱼ| ≤ 1` once each step converges
+//! ([`screening::variants::audit_screen`]). For the paper's safe rules
+//! this must find nothing; any violation increments the
+//! `screening.violations` counter, emits an error-level event, and is
+//! reported per step (`audit_violations` in the path JSON/stats).
 #![allow(clippy::needless_range_loop)]
 
 pub mod cli;

@@ -41,6 +41,7 @@ fn run(args: &[String]) -> Result<()> {
     for key in [
         "data", "rule", "solver", "steps", "min-frac", "tol", "workers", "engine",
         "artifacts", "addr", "lambda-frac", "lambda2-frac", "out", "csv",
+        "trace-out", "audit",
     ] {
         if let Some(v) = cli.flags.get(key) {
             raw.set(key, v);
@@ -48,7 +49,7 @@ fn run(args: &[String]) -> Result<()> {
     }
     let cfg = RunConfig::from_raw(&raw)?;
 
-    match cli.command.as_str() {
+    let result = match cli.command.as_str() {
         "info" => cmd_info(&cfg),
         "generate" => cmd_generate(&cfg, raw.get("out")),
         "solve" => cmd_solve(&cfg, raw.get_f64("lambda-frac", 0.5)?),
@@ -58,7 +59,17 @@ fn run(args: &[String]) -> Result<()> {
         other => Err(svmscreen::error::Error::config(format!(
             "unknown command {other:?}"
         ))),
+    };
+    // Export the recorded timeline after the work (even a failed run's
+    // partial trace is useful for diagnosis; a write failure must not
+    // mask the run's own result).
+    if let Some(path) = &cfg.trace_out {
+        match svmscreen::telemetry::trace::write_chrome_file(path) {
+            Ok(n) => println!("wrote {path} ({n} trace records; load in Perfetto)"),
+            Err(e) => eprintln!("trace: cannot write {path}: {e}"),
+        }
     }
+    result
 }
 
 fn load_problem(cfg: &RunConfig) -> Result<Problem> {
@@ -168,6 +179,18 @@ fn cmd_path(cfg: &RunConfig, csv: Option<&str>) -> Result<()> {
         t.solve_seconds,
         100.0 * t.mean_rejection
     );
+    if cfg.audit {
+        let audit_total: usize = report
+            .steps
+            .iter()
+            .filter_map(|s| s.audit_violations)
+            .sum();
+        println!(
+            "safety audit: {} KKT violation(s) across {} step(s)",
+            audit_total,
+            report.steps.len()
+        );
+    }
     if let Some(path) = csv {
         let rows: Vec<Vec<String>> =
             report.steps.iter().map(|s| s.row().to_vec()).collect();
@@ -195,6 +218,10 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
     )?;
     println!("screening service listening on {}", server.addr);
     println!("protocol: one JSON object per line; try {{\"cmd\":\"info\"}}");
+    // Long runs: arm the periodic stats dump when configured.
+    if let Some(every) = svmscreen::telemetry::start_stats_dump_from_env() {
+        println!("stats dump every {:.1}s (PALLAS_STATS_DUMP_SECS)", every.as_secs_f64());
+    }
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -40,6 +40,11 @@ pub struct PathConfig {
     pub solve: SolveOptions,
     /// Tolerance for the unsafe-rule violation check (|θᵀf̂| > 1 + tol).
     pub violation_tol: f64,
+    /// Safety-audit mode: after each step converges, re-check every
+    /// screened-out feature against the KKT condition at the solution
+    /// ([`crate::screening::variants::audit_screen`]). Violations land
+    /// in `screening.violations` and each emits an error event.
+    pub audit: bool,
 }
 
 impl Default for PathConfig {
@@ -49,6 +54,7 @@ impl Default for PathConfig {
             solver: SolverKind::Cd,
             solve: SolveOptions::default(),
             violation_tol: 1e-4,
+            audit: false,
         }
     }
 }
@@ -198,6 +204,25 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             );
         }
 
+        // 3b. Safety audit: re-check the discarded features against the
+        // KKT condition at the converged solution. For safe rules this
+        // must come up empty; the counter/event trail is the point.
+        let audit_violations = if cfg.audit {
+            let audit_span = Span::enter("path.audit");
+            let audit = crate::screening::variants::audit_screen(
+                &problem.x,
+                &problem.y,
+                &screen,
+                &w,
+                b,
+                cfg.violation_tol,
+            );
+            drop(audit_span);
+            Some(audit.violations.len())
+        } else {
+            None
+        };
+
         // 4. Dual map for the next step.
         theta_prev = crate::svm::dual::theta_from_primal(&problem.x, &problem.y, &w, b, lambda);
         lambda_prev = lambda;
@@ -215,6 +240,7 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             screen_seconds,
             solve_seconds,
             violations,
+            audit_violations,
         };
         step.emit();
         steps.push(step);
@@ -327,6 +353,28 @@ mod tests {
             );
             assert_close(o1, o2, 1e-4, &format!("strong-rule objective step {k}"));
         }
+    }
+
+    #[test]
+    fn audit_mode_reports_clean_steps_for_safe_rule() {
+        let p = problem(121);
+        let grid = geometric(p.lambda_max(), 0.1, 5);
+        let rep = run_path(
+            &p,
+            &grid,
+            &PathConfig { audit: true, ..Default::default() },
+        )
+        .unwrap();
+        for (k, s) in rep.steps.iter().enumerate() {
+            assert_eq!(
+                s.audit_violations,
+                Some(0),
+                "safe rule must audit clean at step {k}"
+            );
+        }
+        // Audit disabled -> the field stays None.
+        let plain = run_path(&p, &grid[..2], &PathConfig::default()).unwrap();
+        assert!(plain.steps.iter().all(|s| s.audit_violations.is_none()));
     }
 
     #[test]

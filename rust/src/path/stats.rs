@@ -29,6 +29,9 @@ pub struct PathStep {
     pub solve_seconds: f64,
     /// Violations repaired at this step (unsafe rules only).
     pub violations: usize,
+    /// KKT violations found by the safety audit (`None` when the audit
+    /// did not run; `Some(0)` is a clean audited step).
+    pub audit_violations: Option<usize>,
 }
 
 impl PathStep {
@@ -61,6 +64,13 @@ impl PathStep {
             ("screen_seconds", Json::Num(self.screen_seconds)),
             ("solve_seconds", Json::Num(self.solve_seconds)),
             ("violations", Json::Num(self.violations as f64)),
+            (
+                "audit_violations",
+                match self.audit_violations {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -73,6 +83,10 @@ impl PathStep {
         tele.counter("path.features_screened").add(self.screened as u64);
         tele.counter("path.features_kept").add(self.kept as u64);
         tele.counter("path.violations").add(self.violations as u64);
+        if let Some(n) = self.audit_violations {
+            tele.counter("path.audit_steps").inc();
+            tele.counter("path.audit_violations").add(n as u64);
+        }
         tele.gauge("path.last_rejection").set(self.rejection);
         if telemetry::enabled(Level::Debug) {
             telemetry::emit_with(
@@ -161,6 +175,7 @@ mod tests {
             screen_seconds: ss,
             solve_seconds: 2.0 * ss,
             violations: vs,
+            audit_violations: None,
         }
     }
 

@@ -1,0 +1,139 @@
+//! Standardized machine-readable bench artifacts.
+//!
+//! Every bench in `benches/` used to print tables plus ad-hoc CSV; T1
+//! additionally dumped a raw telemetry snapshot. This module gives all
+//! of them one schema (`pallas.bench.v1`) so CI can archive and diff
+//! runs: a `BENCH_<id>.json` file with the config tag, wall time, the
+//! headline screening numbers (mean rejection ratio, speedup over the
+//! no-screening baseline), bench-specific extras, and the full metrics
+//! snapshot. [`BenchArtifact::write`] also honors `PALLAS_TRACE_OUT`,
+//! so a bench run can leave a Perfetto-loadable timeline next to its
+//! numbers.
+
+use crate::coordinator::protocol::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag stamped into every artifact.
+pub const SCHEMA: &str = "pallas.bench.v1";
+
+/// One bench run's machine-readable summary.
+#[derive(Debug, Clone)]
+pub struct BenchArtifact {
+    /// Bench id (`t1`, `f3`, …) — names the output file.
+    pub id: String,
+    /// Human config tag (dataset scale, rules swept, grid shape).
+    pub config: String,
+    /// Total bench wall time in seconds.
+    pub wall_seconds: f64,
+    /// Mean rejection ratio over the runs that screened (if meaningful).
+    pub mean_rejection: Option<f64>,
+    /// Speedup vs the no-screening baseline (if the bench measures one).
+    pub speedup: Option<f64>,
+    /// Bench-specific extras (row counts, thresholds, per-rule numbers).
+    pub extra: BTreeMap<String, Json>,
+}
+
+impl BenchArtifact {
+    /// Starts an artifact for bench `id` with a config tag.
+    pub fn new(id: impl Into<String>, config: impl Into<String>) -> Self {
+        BenchArtifact {
+            id: id.into(),
+            config: config.into(),
+            wall_seconds: 0.0,
+            mean_rejection: None,
+            speedup: None,
+            extra: BTreeMap::new(),
+        }
+    }
+
+    /// Sets the wall time.
+    pub fn wall_seconds(mut self, secs: f64) -> Self {
+        self.wall_seconds = secs;
+        self
+    }
+
+    /// Sets the headline mean rejection ratio.
+    pub fn mean_rejection(mut self, r: f64) -> Self {
+        self.mean_rejection = Some(r);
+        self
+    }
+
+    /// Sets the headline speedup vs no screening.
+    pub fn speedup(mut self, s: f64) -> Self {
+        self.speedup = Some(s);
+        self
+    }
+
+    /// Attaches a bench-specific extra field.
+    pub fn extra(mut self, key: impl Into<String>, value: Json) -> Self {
+        self.extra.insert(key.into(), value);
+        self
+    }
+
+    /// The artifact as JSON: schema tag, headline fields, extras, and
+    /// the current global metrics snapshot under `"metrics"`.
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| match v {
+            Some(x) if x.is_finite() => Json::Num(x),
+            _ => Json::Null,
+        };
+        Json::obj(vec![
+            ("schema", Json::Str(SCHEMA.into())),
+            ("id", Json::Str(self.id.clone())),
+            ("config", Json::Str(self.config.clone())),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("mean_rejection", opt(self.mean_rejection)),
+            ("speedup", opt(self.speedup)),
+            ("extra", Json::Obj(self.extra.clone())),
+            ("metrics", crate::telemetry::global().snapshot().to_json()),
+        ])
+    }
+
+    /// Writes `BENCH_<id>.json` in the current directory, reports it on
+    /// stdout, and honors `PALLAS_TRACE_OUT` (Chrome trace alongside
+    /// the numbers). Returns the path written.
+    pub fn write(&self) -> std::io::Result<String> {
+        let path = format!("BENCH_{}.json", self.id);
+        let body = self.to_json().encode();
+        std::fs::write(&path, &body)?;
+        println!("[bench] wrote {path} ({} bytes)", body.len());
+        crate::telemetry::trace::write_from_env();
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::parse;
+
+    #[test]
+    fn artifact_json_has_schema_and_headline_fields() {
+        crate::telemetry::global().counter("bench.test.touch").inc();
+        let art = BenchArtifact::new("t9", "trio scale=1.0 rules=all")
+            .wall_seconds(1.25)
+            .mean_rejection(0.8)
+            .speedup(2.5)
+            .extra("rows", Json::Num(42.0));
+        let doc = parse(&art.to_json().encode()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(doc.get("id").unwrap().as_str(), Some("t9"));
+        assert_eq!(doc.get("wall_seconds").unwrap().as_f64(), Some(1.25));
+        assert_eq!(doc.get("mean_rejection").unwrap().as_f64(), Some(0.8));
+        assert_eq!(doc.get("speedup").unwrap().as_f64(), Some(2.5));
+        assert_eq!(
+            doc.get("extra").unwrap().get("rows").unwrap().as_f64(),
+            Some(42.0)
+        );
+        // The metrics snapshot rides along.
+        assert!(doc.get("metrics").unwrap().get("counters").is_some());
+    }
+
+    #[test]
+    fn missing_headlines_encode_as_null() {
+        let doc =
+            parse(&BenchArtifact::new("x", "cfg").to_json().encode()).unwrap();
+        assert_eq!(doc.get("mean_rejection"), Some(&Json::Null));
+        assert_eq!(doc.get("speedup"), Some(&Json::Null));
+    }
+}

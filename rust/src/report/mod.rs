@@ -2,12 +2,15 @@
 //! statistics and Prometheus text rendering. The vendored crate set has
 //! no `criterion`, so the bench harness in `benches/` builds on
 //! [`timer::BenchStats`]; [`prometheus`] renders live telemetry
-//! snapshots for scrapers.
+//! snapshots for scrapers, and [`bench`] standardizes the
+//! `BENCH_<id>.json` artifacts every experiment emits for CI.
 
+pub mod bench;
 pub mod csv;
 pub mod prometheus;
 pub mod table;
 pub mod timer;
 
+pub use bench::BenchArtifact;
 pub use table::Table;
 pub use timer::{BenchStats, Stopwatch};

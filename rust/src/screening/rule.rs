@@ -183,14 +183,31 @@ pub fn screen_all<X: FeatureMatrix>(
 /// amortizes (1 for [`screen_all`]; `1/k`-shared for [`screen_multi`],
 /// which calls this once per target with `sweeps = 0` after the first).
 fn record_screen_telemetry(report: &ScreenReport, sweeps: u64) {
+    use crate::telemetry::BucketSpec;
     let tele = crate::telemetry::global();
     let name = report.rule.name();
+    let kept = report.keep.len() - report.n_screened();
     tele.counter(&format!("screening.{name}.sweeps")).add(sweeps);
     tele.counter(&format!("screening.{name}.features_screened"))
         .add(report.n_screened() as u64);
-    tele.counter(&format!("screening.{name}.features_kept"))
-        .add((report.keep.len() - report.n_screened()) as u64);
+    tele.counter(&format!("screening.{name}.features_kept")).add(kept as u64);
     tele.histogram("screening.sweep_seconds").record(report.seconds);
+    // Screening-efficacy distributions: how much each rule rejects and
+    // how big the surviving problem is, across every λ₂ screened.
+    tele.histogram(&format!("screening.{name}.rejection"))
+        .record(report.rejection_ratio());
+    tele.histogram_with(&format!("screening.{name}.kept_size"), BucketSpec::COUNTS)
+        .record(kept as f64);
+    // Per-λ view: the rejection ratio varies strongly along the path, so
+    // bucket it by the λ₂/λ₁ decile (d9 ≈ just below λ_max, d0 ≈ deep
+    // path). Gauges are last-value-wins; with the sequential runner each
+    // decile holds the most recent ratio observed in that λ range.
+    let frac = report.lambda2 / report.lambda1;
+    if frac.is_finite() && (0.0..=1.0).contains(&frac) {
+        let decile = ((frac * 10.0).floor() as usize).min(9);
+        tele.gauge(&format!("screening.{name}.rejection.d{decile}"))
+            .set(report.rejection_ratio());
+    }
     crate::tele_debug!(
         "screening",
         "rule {name} l2/l1 {:.4}: screened {}/{} ({:.1}%) in {}",

@@ -11,8 +11,15 @@
 //! * [`strong_keep`] — the (sequential) strong rule adapted to the SVM
 //!   dual: keep iff `|f̂ᵀθ₁| ≥ 2λ₂/λ₁ − 1`. **Unsafe**: it can discard
 //!   active features; T2 counts its violations.
+//! * [`audit_screen`] — the safety-audit mode: re-checks every
+//!   screened-out feature against the KKT condition `|θ₂ᵀf̂| ≤ 1` at the
+//!   *converged* solution, generalizing T2's violation accounting from
+//!   a bench-only check to a first-class, metered runtime mode
+//!   (`--audit` on the CLI, `screening.violations` in telemetry).
 
 use super::precompute::{FeatureStats, SharedContext};
+use super::rule::{RuleKind, ScreenReport};
+use crate::data::FeatureMatrix;
 use crate::linalg::proj_null_norm_sq;
 
 /// Ball ∩ equality bound (Thm 6.7 formula used unconditionally):
@@ -53,6 +60,100 @@ pub fn strong_score(ctx: &SharedContext, s: &FeatureStats) -> f64 {
         return f64::INFINITY;
     }
     s.dt.abs() / threshold
+}
+
+/// One screened-out feature that fails the KKT check at convergence.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Feature index.
+    pub feature: usize,
+    /// `|θ₂ᵀf̂|` at the converged solution (> 1 means active).
+    pub correlation: f64,
+    /// The feature's primal weight (0 when excluded from the solve).
+    pub weight: f64,
+}
+
+/// Result of one safety audit: every screened-out feature of a
+/// [`ScreenReport`], re-checked against the converged solution.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// Rule that produced the screening decision.
+    pub rule: RuleKind,
+    /// The λ the screening targeted (and the solve converged at).
+    pub lambda2: f64,
+    /// Screened-out features checked.
+    pub checked: usize,
+    /// KKT tolerance used (`|θ₂ᵀf̂| > 1 + tol` flags a violation).
+    pub tol: f64,
+    /// Violations found (empty for a safe rule, barring solver error).
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    /// Whether the audit found no violations.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Safety audit: given the *converged* primal `(w, b)` at
+/// `report.lambda2`, maps it to the dual `θ₂` (Eq. 20) and verifies the
+/// KKT inactivity condition `|θ₂ᵀf̂_j| ≤ 1 + tol` for every feature the
+/// rule screened out. A violation means screening discarded a feature
+/// that is active at the optimum — impossible for a safe rule with an
+/// exact `θ₁`, so any hit flags either an unsafe heuristic or a solver
+/// tolerance problem. Findings are metered (`screening.violations`,
+/// `screening.audit.*`) and each violation emits an error-level event.
+pub fn audit_screen<X: FeatureMatrix>(
+    x: &X,
+    y: &[f64],
+    report: &ScreenReport,
+    w: &[f64],
+    b: f64,
+    tol: f64,
+) -> AuditReport {
+    let theta = crate::svm::dual::theta_from_primal(x, y, w, b, report.lambda2);
+    let ytheta: Vec<f64> = y.iter().zip(&theta).map(|(yi, ti)| yi * ti).collect();
+    let mut checked = 0usize;
+    let mut violations = Vec::new();
+    for (j, &keep) in report.keep.iter().enumerate() {
+        if keep {
+            continue;
+        }
+        checked += 1;
+        // f̂ᵀθ = (Yf)ᵀθ = fᵀ(y∘θ).
+        let correlation = x.col_dot(j, &ytheta).abs();
+        if correlation > 1.0 + tol {
+            violations.push(Violation {
+                feature: j,
+                correlation,
+                weight: w.get(j).copied().unwrap_or(0.0),
+            });
+        }
+    }
+    let tele = crate::telemetry::global();
+    tele.counter("screening.audit.runs").inc();
+    tele.counter("screening.audit.checked").add(checked as u64);
+    // Touch the violations counter even when clean so a zero shows up
+    // in `{"cmd":"stats"}` snapshots — "audited, found nothing" must be
+    // distinguishable from "never audited".
+    let viol_counter = tele.counter("screening.violations");
+    if !violations.is_empty() {
+        viol_counter.add(violations.len() as u64);
+        for v in &violations {
+            crate::tele_error!(
+                "screening.audit",
+                "rule {} screened ACTIVE feature {} at lambda {:.4e}: \
+                 |theta'f|={:.6} w={:.3e}",
+                report.rule.name(),
+                v.feature,
+                report.lambda2,
+                v.correlation,
+                v.weight
+            );
+        }
+    }
+    AuditReport { rule: report.rule, lambda2: report.lambda2, checked, tol, violations }
 }
 
 #[cfg(test)]
@@ -110,5 +211,71 @@ mod tests {
             assert!(strong_keep(&ctx, &s));
             assert_eq!(strong_score(&ctx, &s), f64::INFINITY);
         }
+    }
+
+    #[test]
+    fn audit_clean_for_safe_rule() {
+        use crate::screening::rule::screen_all;
+        use crate::solver::api::{solve, SolveOptions, SolverKind};
+        let p = Problem::from_dataset(&SynthSpec::text(50, 120, 121).generate());
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        let l2 = 0.6 * l1;
+        let report =
+            screen_all(RuleKind::Paper, &p.x, &p.y, &theta1, l1, l2).unwrap();
+        assert!(report.n_screened() > 0, "need something to audit");
+        let sol =
+            solve(SolverKind::Cd, &p.x, &p.y, l2, None, &SolveOptions::precise())
+                .unwrap();
+        let audit = audit_screen(&p.x, &p.y, &report, &sol.w, sol.b, 1e-4);
+        assert!(audit.is_clean(), "violations: {:?}", audit.violations);
+        assert_eq!(audit.checked, report.n_screened());
+        assert_eq!(audit.rule, RuleKind::Paper);
+    }
+
+    #[test]
+    fn audit_flags_doctored_report() {
+        use crate::solver::api::{solve, SolveOptions, SolverKind};
+        let p = Problem::from_dataset(&SynthSpec::text(50, 120, 123).generate());
+        let l2 = 0.3 * p.lambda_max();
+        let sol =
+            solve(SolverKind::Cd, &p.x, &p.y, l2, None, &SolveOptions::precise())
+                .unwrap();
+        // Forge a report that claims an *active* feature was screened out.
+        let active = (0..p.m())
+            .max_by(|&a, &b| {
+                sol.w[a].abs().partial_cmp(&sol.w[b].abs()).unwrap()
+            })
+            .unwrap();
+        assert!(sol.w[active].abs() > 1e-6, "need an active feature");
+        let mut keep = vec![true; p.m()];
+        keep[active] = false;
+        let forged = ScreenReport {
+            rule: RuleKind::Strong,
+            lambda1: p.lambda_max(),
+            lambda2: l2,
+            keep,
+            bounds: vec![f64::INFINITY; p.m()],
+            seconds: 0.0,
+        };
+        // Re-solve honoring the forged screening (the active feature is
+        // excluded): at *that* optimum the KKT correlation of the missing
+        // feature exceeds 1, which is exactly what the audit must catch.
+        let kept: Vec<usize> = (0..p.m()).filter(|&j| j != active).collect();
+        let red =
+            crate::solver::reduced::ReducedProblem::build(&p.x, kept).unwrap();
+        let red_sol = red
+            .solve(SolverKind::Cd, &p.y, l2, None, &SolveOptions::precise())
+            .unwrap();
+        let before =
+            crate::telemetry::global().counter("screening.violations").get();
+        let audit = audit_screen(&p.x, &p.y, &forged, &red_sol.w, red_sol.b, 1e-4);
+        assert_eq!(audit.checked, 1);
+        assert_eq!(audit.violations.len(), 1);
+        assert_eq!(audit.violations[0].feature, active);
+        assert!(audit.violations[0].correlation > 1.0);
+        let after =
+            crate::telemetry::global().counter("screening.violations").get();
+        assert!(after >= before + 1, "violation counter must advance");
     }
 }

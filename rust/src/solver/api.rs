@@ -135,6 +135,10 @@ pub fn solve<X: FeatureMatrix>(
     w0: Option<&[f64]>,
     opts: &SolveOptions,
 ) -> Result<SolveReport> {
+    let _span = crate::telemetry::Span::enter_labeled(
+        format!("solver.{}", kind.name()),
+        Some(format!("lambda={lambda:.4e}")),
+    );
     match kind {
         SolverKind::Cd => crate::solver::cd::CdSolver::default().solve(x, y, lambda, w0, opts),
         SolverKind::Fista => {

@@ -8,10 +8,13 @@
 //! once (registry lookup takes a mutex) and then update it with plain
 //! relaxed atomics from any thread.
 //!
-//! Histograms are log-scale: half-power-of-two buckets spanning
-//! `[2⁻³⁰ s, 2⁸ s]` (≈1 ns … ≈4 min), which bounds the quantile
-//! estimation error at ~19% — plenty for latency percentiles — while
-//! keeping `record` a single atomic increment.
+//! Histograms are log-scale. The default [`BucketSpec::SECONDS`] uses
+//! half-power-of-two buckets spanning `[2⁻³⁰ s, 2⁸ s]` (≈1 ns … ≈4 min),
+//! which bounds the quantile estimation error at ~19% — plenty for
+//! latency percentiles — while keeping `record` a single atomic
+//! increment. Non-latency quantities (batch bytes, kept-set sizes) use
+//! [`BucketSpec::COUNTS`] via [`Registry::histogram_with`]: power-of-two
+//! buckets over `[1, 2⁴⁰]`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -64,18 +67,53 @@ impl Gauge {
     }
 }
 
-/// Smallest bucket lower edge: `2^MIN_EXP` seconds (≈ 1 ns).
-const MIN_EXP: i32 = -30;
-/// Largest bucket upper edge: `2^MAX_EXP` seconds (= 256 s).
-const MAX_EXP: i32 = 8;
-/// Buckets per power of two.
-const PER_POW2: i32 = 2;
-/// Bucket count (plus one overflow bucket at the end).
-const N_BUCKETS: usize = ((MAX_EXP - MIN_EXP) * PER_POW2) as usize + 1;
+/// Log-bucket layout of a [`Histogram`]: `per_pow2` buckets per power
+/// of two over `[2^min_exp, 2^max_exp]`, plus one overflow bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketSpec {
+    /// Smallest bucket lower edge is `2^min_exp`.
+    pub min_exp: i32,
+    /// Largest bucket upper edge is `2^max_exp`.
+    pub max_exp: i32,
+    /// Buckets per power of two (resolution).
+    pub per_pow2: i32,
+}
 
-/// A log-scale histogram of nonnegative f64 samples (typically seconds).
+impl BucketSpec {
+    /// Latency buckets: `[2⁻³⁰ s, 2⁸ s]` (≈1 ns … ≈4 min) at half-power
+    /// resolution. The default for [`Registry::histogram`].
+    pub const SECONDS: BucketSpec = BucketSpec { min_exp: -30, max_exp: 8, per_pow2: 2 };
+
+    /// Count/byte buckets: `[1, 2⁴⁰]` (~10¹²) at power-of-two
+    /// resolution — batch sizes, payload bytes, kept-set sizes.
+    pub const COUNTS: BucketSpec = BucketSpec { min_exp: 0, max_exp: 40, per_pow2: 1 };
+
+    /// Number of buckets (plus one overflow bucket at the end).
+    fn n_buckets(&self) -> usize {
+        ((self.max_exp - self.min_exp) * self.per_pow2) as usize + 1
+    }
+
+    /// Maps a sample to its bucket index.
+    fn bucket_index(&self, v: f64) -> usize {
+        if v <= 0.0 {
+            return 0;
+        }
+        let idx =
+            ((v.log2() - self.min_exp as f64) * self.per_pow2 as f64).floor() as i64;
+        idx.clamp(0, self.n_buckets() as i64 - 1) as usize
+    }
+
+    /// Geometric midpoint of bucket `i` (its quantile representative).
+    fn bucket_mid(&self, i: usize) -> f64 {
+        let lower_log2 = self.min_exp as f64 + i as f64 / self.per_pow2 as f64;
+        (lower_log2 + 0.5 / self.per_pow2 as f64).exp2()
+    }
+}
+
+/// A log-scale histogram of nonnegative f64 samples.
 #[derive(Debug)]
 pub struct Histogram {
+    spec: BucketSpec,
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_bits: AtomicU64,
@@ -85,39 +123,35 @@ pub struct Histogram {
 
 impl Default for Histogram {
     fn default() -> Self {
+        Histogram::new(BucketSpec::SECONDS)
+    }
+}
+
+impl Histogram {
+    /// Creates a histogram with the given bucket layout.
+    pub fn new(spec: BucketSpec) -> Self {
         Histogram {
-            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            spec,
+            buckets: (0..spec.n_buckets()).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_bits: AtomicU64::new(0.0f64.to_bits()),
             min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
             max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
         }
     }
-}
 
-/// Maps a sample to its bucket index.
-fn bucket_index(v: f64) -> usize {
-    if v <= 0.0 {
-        return 0;
+    /// The bucket layout this histogram was built with.
+    pub fn spec(&self) -> BucketSpec {
+        self.spec
     }
-    let idx = ((v.log2() - MIN_EXP as f64) * PER_POW2 as f64).floor() as i64;
-    idx.clamp(0, N_BUCKETS as i64 - 1) as usize
-}
 
-/// Geometric midpoint of bucket `i` (used as its quantile representative).
-fn bucket_mid(i: usize) -> f64 {
-    let lower_log2 = MIN_EXP as f64 + i as f64 / PER_POW2 as f64;
-    (lower_log2 + 0.5 / PER_POW2 as f64).exp2()
-}
-
-impl Histogram {
     /// Records one sample. NaN, infinite and negative samples are
     /// dropped (they would poison quantiles).
     pub fn record(&self, v: f64) {
         if !v.is_finite() || v < 0.0 {
             return;
         }
-        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.buckets[self.spec.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         // CAS loops for the f64 aggregates; contention here is rare
         // (histograms are updated per span/request, not per coordinate).
@@ -167,7 +201,7 @@ impl Histogram {
                 if seen >= target {
                     // Clamp the bucket representative into the observed
                     // range so tiny histograms stay sensible.
-                    return bucket_mid(i).clamp(min, max);
+                    return self.spec.bucket_mid(i).clamp(min, max);
                 }
             }
             max
@@ -246,9 +280,18 @@ impl Registry {
         lookup(&self.gauges, name)
     }
 
-    /// The histogram named `name`, created on first use.
+    /// The histogram named `name`, created on first use with
+    /// [`BucketSpec::SECONDS`] buckets.
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
-        lookup(&self.histograms, name)
+        lookup_with(&self.histograms, name, || Histogram::new(BucketSpec::SECONDS))
+    }
+
+    /// The histogram named `name`, created on first use with the given
+    /// bucket layout. A name's first registration wins: later callers
+    /// (with any spec) get the existing histogram, so call sites that
+    /// share a name must agree on its layout.
+    pub fn histogram_with(&self, name: &str, spec: BucketSpec) -> Arc<Histogram> {
+        lookup_with(&self.histograms, name, || Histogram::new(spec))
     }
 
     /// A point-in-time snapshot of every registered metric.
@@ -288,11 +331,19 @@ impl Registry {
 }
 
 fn lookup<T: Default>(map: &Mutex<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    lookup_with(map, name, T::default)
+}
+
+fn lookup_with<T>(
+    map: &Mutex<BTreeMap<String, Arc<T>>>,
+    name: &str,
+    make: impl FnOnce() -> T,
+) -> Arc<T> {
     let mut guard = map.lock().unwrap();
     if let Some(v) = guard.get(name) {
         return Arc::clone(v);
     }
-    let v = Arc::new(T::default());
+    let v = Arc::new(make());
     guard.insert(name.to_string(), Arc::clone(&v));
     v
 }
@@ -411,15 +462,45 @@ mod tests {
 
     #[test]
     fn bucket_index_monotone_and_clamped() {
-        assert_eq!(bucket_index(0.0), 0);
-        assert_eq!(bucket_index(1e-12), 0);
-        assert_eq!(bucket_index(1e9), N_BUCKETS - 1);
+        let spec = BucketSpec::SECONDS;
+        assert_eq!(spec.bucket_index(0.0), 0);
+        assert_eq!(spec.bucket_index(1e-12), 0);
+        assert_eq!(spec.bucket_index(1e9), spec.n_buckets() - 1);
         let mut prev = 0;
         for e in -28..7 {
-            let i = bucket_index((e as f64).exp2());
+            let i = spec.bucket_index((e as f64).exp2());
             assert!(i >= prev, "bucket index must be monotone");
             prev = i;
         }
+    }
+
+    #[test]
+    fn counts_spec_holds_large_values() {
+        // The SECONDS layout tops out at 2^8; byte counts need COUNTS.
+        let h = Histogram::new(BucketSpec::COUNTS);
+        for _ in 0..90 {
+            h.record(4096.0);
+        }
+        for _ in 0..10 {
+            h.record(1_048_576.0);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        // Power-of-two buckets: estimates within a factor of 2.
+        assert!(s.p50 >= 2048.0 && s.p50 <= 8192.0, "p50 {}", s.p50);
+        assert!(s.p99 >= 0.5e6 && s.p99 <= 2.1e6, "p99 {}", s.p99);
+        assert_eq!(s.max, 1_048_576.0);
+    }
+
+    #[test]
+    fn histogram_with_first_registration_wins() {
+        let r = Registry::new();
+        let h = r.histogram_with("batch.bytes", BucketSpec::COUNTS);
+        assert_eq!(h.spec(), BucketSpec::COUNTS);
+        // Later plain lookups return the same histogram, same layout.
+        let again = r.histogram("batch.bytes");
+        assert!(Arc::ptr_eq(&h, &again));
+        assert_eq!(again.spec(), BucketSpec::COUNTS);
     }
 
     #[test]

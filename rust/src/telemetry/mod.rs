@@ -16,18 +16,27 @@
 //!   optional JSONL trace file (`PALLAS_LOG_JSON=path`), with the
 //!   [`tele_error!`](crate::tele_error)…[`tele_trace!`](crate::tele_trace)
 //!   macros as the front end.
+//! * [`trace`] — a fixed-capacity ring of completed span / instant
+//!   records (`PALLAS_TRACE_CAPACITY`, default 16384) exportable as
+//!   Chrome trace-event JSON (Perfetto / `chrome://tracing`) via
+//!   `--trace-out`, `PALLAS_TRACE_OUT` or the `{"cmd":"trace"}`
+//!   protocol command.
+//! * [`dump`] — a periodic stats-dump thread for long `serve` runs
+//!   (`PALLAS_STATS_DUMP_SECS`), pushing full snapshots through the
+//!   sinks.
 //!
 //! ## Instrumented layers
 //!
 //! | layer | metrics (prefix) | events |
 //! |---|---|---|
 //! | solver CD / FISTA | `solver.cd.*`, `solver.fista.*` | solve summary (debug), gap checks (trace) |
-//! | screening sweeps | `screening.*` | per-sweep summary (debug) |
+//! | screening sweeps | `screening.*` incl. per-rule rejection/kept-set | per-sweep summary (debug) |
+//! | safety audit | `screening.violations`, `screening.audit.*` | error event per KKT violation |
 //! | path runner | `path.*` + spans `path.run/screen/solve` | per-step `PathStep` events (debug) |
-//! | coordinator | `server.*` request/latency/batching | connection + request events |
+//! | coordinator | `server.*` request/latency/batch bytes | connection + request events |
 //!
-//! The server exposes all of it live via the `{"cmd":"stats"}`
-//! protocol command.
+//! The server exposes all of it live via the `{"cmd":"stats"}` and
+//! `{"cmd":"trace"}` protocol commands.
 //!
 //! ## Quick use
 //!
@@ -42,15 +51,20 @@
 //! assert!(telemetry::global().snapshot().counters["demo.events"] >= 1);
 //! ```
 
+pub mod dump;
 pub mod metrics;
 pub mod sink;
 pub mod span;
+pub mod trace;
 
+pub use dump::{start_stats_dump, start_stats_dump_from_env};
 pub use metrics::{
-    global, Counter, Gauge, Histogram, HistogramSnapshot, MetricsSnapshot, Registry,
+    global, BucketSpec, Counter, Gauge, Histogram, HistogramSnapshot,
+    MetricsSnapshot, Registry,
 };
 pub use sink::{emit, emit_with, enabled, init_from_env, set_stderr_level, Level};
-pub use span::{current_path, depth, Span};
+pub use span::{adopt_path, current_path, depth, Span};
+pub use trace::{TraceRecord, TraceRing};
 
 /// Emits an event at an explicit [`Level`]; the message formats lazily
 /// (only when some sink would accept the event).

@@ -133,6 +133,12 @@ pub fn emit(level: Level, target: &str, msg: &str) {
 /// Emits an event with optional structured `fields` (JSONL sink only;
 /// the stderr line stays human-oriented).
 pub fn emit_with(level: Level, target: &str, msg: &str, fields: Option<&Json>) {
+    // Warn/error events are rare and load-bearing (safety violations,
+    // repair loops): mirror them into the trace ring as instant markers
+    // so exported timelines show *when* they happened.
+    if level <= Level::Warn {
+        super::trace::instant(target, Some(msg));
+    }
     let s = sinks();
     let ts = SystemTime::now()
         .duration_since(UNIX_EPOCH)

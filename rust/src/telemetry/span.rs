@@ -9,10 +9,13 @@
 //!
 //! Spans replace the raw `Instant`/`Stopwatch` timing that used to be
 //! scattered through `path/runner.rs` and `coordinator/server.rs`:
-//! the same reading is now *also* a named metric, for free.
+//! the same reading is now *also* a named metric, for free — and every
+//! closed span additionally lands in the [trace ring](super::trace) so
+//! exported timelines (Perfetto, `{"cmd":"trace"}`) replay the nesting.
 
 use super::metrics;
 use super::sink::{self, Level};
+use super::trace;
 use std::cell::RefCell;
 use std::time::Instant;
 
@@ -31,6 +34,36 @@ pub fn current_path() -> String {
     STACK.with(|s| s.borrow().join("/"))
 }
 
+/// RAII guard installed by [`adopt_path`]: pops the adopted frames on
+/// drop.
+#[derive(Debug)]
+pub struct AdoptedPath {
+    frames: usize,
+}
+
+impl Drop for AdoptedPath {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            let keep = stack.len().saturating_sub(self.frames);
+            stack.truncate(keep);
+        });
+    }
+}
+
+/// Adopts a parent span path (as returned by [`current_path`]) on this
+/// thread: spans opened while the guard lives nest *under* the parent,
+/// so work shipped to pool workers keeps its attribution instead of
+/// collapsing to depth 0 in exported traces. The guard pops the
+/// adopted frames on drop.
+pub fn adopt_path(parent: &str) -> AdoptedPath {
+    let frames: Vec<String> =
+        parent.split('/').filter(|s| !s.is_empty()).map(str::to_string).collect();
+    let n = frames.len();
+    STACK.with(|s| s.borrow_mut().extend(frames));
+    AdoptedPath { frames: n }
+}
+
 /// An RAII wall-time span. Construct with [`Span::enter`]; the drop
 /// records `<name>.seconds` into the [global registry](metrics::global).
 #[derive(Debug)]
@@ -38,6 +71,8 @@ pub struct Span {
     name: String,
     label: Option<String>,
     start: Instant,
+    start_us: u64,
+    depth: usize,
     armed: bool,
 }
 
@@ -62,8 +97,16 @@ impl Span {
                 None => sink::emit(Level::Debug, &name, "begin"),
             }
         }
+        let depth = depth();
         STACK.with(|s| s.borrow_mut().push(name.clone()));
-        Span { name, label, start: Instant::now(), armed: true }
+        Span {
+            name,
+            label,
+            start: Instant::now(),
+            start_us: trace::now_us(),
+            depth,
+            armed: true,
+        }
     }
 
     /// Seconds elapsed so far (the span keeps running).
@@ -94,6 +137,13 @@ impl Span {
             metrics::global()
                 .histogram(&format!("{}.seconds", self.name))
                 .record(secs);
+            trace::record_span(
+                &self.name,
+                self.label.as_deref(),
+                self.start_us,
+                self.start.elapsed().as_micros() as u64,
+                self.depth,
+            );
             if sink::enabled(Level::Debug) {
                 let lbl = self
                     .label
@@ -147,6 +197,44 @@ mod tests {
         let secs = outer.finish();
         assert!(secs >= 0.0);
         assert_eq!(depth(), 0);
+    }
+
+    #[test]
+    fn adopt_path_nests_and_restores() {
+        assert_eq!(current_path(), "");
+        {
+            let _g = adopt_path("path.run/path.solve");
+            assert_eq!(depth(), 2);
+            assert_eq!(current_path(), "path.run/path.solve");
+            let inner = Span::enter("test.adopted");
+            assert_eq!(depth(), 3);
+            assert_eq!(current_path(), "path.run/path.solve/test.adopted");
+            drop(inner);
+            assert_eq!(depth(), 2);
+        }
+        assert_eq!(depth(), 0);
+        // Empty parent adopts nothing.
+        let _g = adopt_path("");
+        assert_eq!(depth(), 0);
+    }
+
+    #[test]
+    fn closed_span_lands_in_trace_ring() {
+        // The ring is process-global and other tests may drain it
+        // (`{"cmd":"trace"}` round-trips); retry so a drain landing
+        // between our record and our check can't flake this test.
+        let mut found = false;
+        for _ in 0..50 {
+            drop(Span::enter("test.traced"));
+            let snap = crate::telemetry::trace::recorder().snapshot();
+            if snap.iter().any(|r| {
+                r.name == "test.traced" && r.kind == crate::telemetry::trace::RecordKind::Span
+            }) {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "span never reached the trace ring");
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Trace recorder: a fixed-capacity ring buffer of completed spans and
+//! instant events, with zero-dependency exporters to Chrome trace-event
+//! JSON (loadable in Perfetto / `chrome://tracing`) and JSONL.
+//!
+//! Metrics ([`super::metrics`]) answer *how much / how fast on average*;
+//! the trace answers *what happened when*. Every [`super::span::Span`]
+//! records itself here on close (name, label, start, duration, thread,
+//! nesting depth), and warn/error events from the sinks land as instant
+//! markers, so a drained ring replays the run's timeline — per-λ screen
+//! and solve phases, batched server sweeps, safety-audit violations.
+//!
+//! Surfaces:
+//!
+//! * `{"cmd":"trace"}` — the coordinator protocol command drains the
+//!   ring over the wire ([`crate::coordinator::server`]).
+//! * `--trace-out FILE` — the CLI writes the ring as a Chrome trace
+//!   after `solve` / `screen` / `path`.
+//! * `PALLAS_TRACE_OUT=FILE` — benches write the same file via
+//!   [`crate::report::bench::BenchArtifact`].
+//! * `PALLAS_TRACE_CAPACITY=N` — ring capacity (default 16384; `0`
+//!   disables recording entirely).
+//!
+//! The ring is bounded: when full, the oldest record is dropped and the
+//! `trace.dropped` counter increments, so long `serve` runs never grow
+//! without bound.
+
+use crate::coordinator::protocol::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default ring capacity when `PALLAS_TRACE_CAPACITY` is unset.
+pub const DEFAULT_CAPACITY: usize = 16_384;
+
+/// What a [`TraceRecord`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// A completed span (has a duration).
+    Span,
+    /// A point-in-time marker (warn/error events, audit violations).
+    Instant,
+}
+
+impl RecordKind {
+    /// Chrome trace-event phase letter: `X` (complete) or `i` (instant).
+    pub fn phase(&self) -> &'static str {
+        match self {
+            RecordKind::Span => "X",
+            RecordKind::Instant => "i",
+        }
+    }
+}
+
+/// One completed span or instant event, as captured by the ring.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    /// Span/event name (dotted-metric style, e.g. `path.solve`).
+    pub name: String,
+    /// Free-form label (e.g. the λ being solved), if any.
+    pub label: Option<String>,
+    /// Record kind (span vs instant marker).
+    pub kind: RecordKind,
+    /// Microseconds since the process trace epoch at which it started.
+    pub ts_us: u64,
+    /// Duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Small dense per-process thread id (not the OS tid).
+    pub tid: u64,
+    /// Span-stack nesting depth at which the record was produced.
+    pub depth: usize,
+}
+
+impl TraceRecord {
+    /// The record as a flat JSON object (JSONL export, protocol drain).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("ph", Json::Str(self.kind.phase().into())),
+            ("ts_us", Json::Num(self.ts_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("tid", Json::Num(self.tid as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+        ];
+        if let Some(l) = &self.label {
+            fields.push(("label", Json::Str(l.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    /// The record as a Chrome trace-event object (`ph: "X"` complete
+    /// events for spans, `ph: "i"` thread-scoped instants).
+    pub fn to_chrome_event(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("cat", Json::Str(category(&self.name).into())),
+            ("ph", Json::Str(self.kind.phase().into())),
+            ("ts", Json::Num(self.ts_us as f64)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(self.tid as f64)),
+        ];
+        match self.kind {
+            RecordKind::Span => fields.push(("dur", Json::Num(self.dur_us as f64))),
+            // Thread-scoped instant marker.
+            RecordKind::Instant => fields.push(("s", Json::Str("t".into()))),
+        }
+        let mut args = vec![("depth", Json::Num(self.depth as f64))];
+        if let Some(l) = &self.label {
+            args.push(("label", Json::Str(l.clone())));
+        }
+        fields.push(("args", Json::obj(args)));
+        Json::obj(fields)
+    }
+}
+
+/// The first dotted segment of a name (`path.solve` → `path`), used as
+/// the Chrome trace category so Perfetto can filter by subsystem.
+fn category(name: &str) -> &str {
+    name.split('.').next().unwrap_or("misc")
+}
+
+struct RingInner {
+    buf: VecDeque<TraceRecord>,
+    dropped: u64,
+}
+
+/// A bounded, thread-safe recorder of [`TraceRecord`]s. The global
+/// instance lives behind [`recorder`]; tests may build private ones.
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl TraceRing {
+    /// Creates a ring holding at most `capacity` records (0 = disabled:
+    /// every record is silently discarded).
+    pub fn new(capacity: usize) -> Self {
+        TraceRing {
+            capacity,
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::with_capacity(capacity.min(1024)),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// The configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Records one trace record, evicting the oldest when full.
+    pub fn record(&self, rec: TraceRecord) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.buf.len() >= self.capacity {
+            inner.buf.pop_front();
+            inner.dropped += 1;
+        }
+        inner.buf.push_back(rec);
+    }
+
+    /// Current number of buffered records.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    /// Whether the ring holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records evicted (ring-full overwrites) since the last [`drain`].
+    ///
+    /// [`drain`]: TraceRing::drain
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Removes and returns every buffered record (oldest first) and
+    /// resets the dropped counter.
+    pub fn drain(&self) -> Vec<TraceRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.dropped = 0;
+        inner.buf.drain(..).collect()
+    }
+
+    /// Clones the buffered records without consuming them.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        self.inner.lock().unwrap().buf.iter().cloned().collect()
+    }
+}
+
+/// The process-wide trace ring. Capacity comes from
+/// `PALLAS_TRACE_CAPACITY` at first use (default [`DEFAULT_CAPACITY`]).
+pub fn recorder() -> &'static TraceRing {
+    static GLOBAL: OnceLock<TraceRing> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let capacity = std::env::var("PALLAS_TRACE_CAPACITY")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        TraceRing::new(capacity)
+    })
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process trace epoch (first telemetry use).
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// A small dense id for the calling thread (assigned on first use, in
+/// order of first trace activity — Chrome traces want integer tids).
+pub fn thread_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// Records a completed span into the global ring (called by
+/// [`super::span::Span`] on close).
+pub fn record_span(
+    name: &str,
+    label: Option<&str>,
+    start_us: u64,
+    dur_us: u64,
+    depth: usize,
+) {
+    recorder().record(TraceRecord {
+        name: name.to_string(),
+        label: label.map(str::to_string),
+        kind: RecordKind::Span,
+        ts_us: start_us,
+        dur_us,
+        tid: thread_id(),
+        depth,
+    });
+}
+
+/// Records an instant marker into the global ring.
+pub fn instant(name: &str, label: Option<&str>) {
+    recorder().record(TraceRecord {
+        name: name.to_string(),
+        label: label.map(str::to_string),
+        kind: RecordKind::Instant,
+        ts_us: now_us(),
+        dur_us: 0,
+        tid: thread_id(),
+        depth: super::span::depth(),
+    });
+}
+
+/// Renders records as a Chrome trace-event document:
+/// `{"traceEvents":[...],"displayTimeUnit":"ms"}`. Perfetto and
+/// `chrome://tracing` load the encoded string directly.
+pub fn chrome_trace(records: &[TraceRecord]) -> Json {
+    Json::obj(vec![
+        (
+            "traceEvents",
+            Json::Arr(records.iter().map(TraceRecord::to_chrome_event).collect()),
+        ),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Renders records as JSONL — one flat JSON object per line.
+pub fn to_jsonl(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().encode());
+        out.push('\n');
+    }
+    out
+}
+
+/// Drains the global ring and writes it as a Chrome trace file.
+/// Returns the number of records written.
+pub fn write_chrome_file(path: &str) -> std::io::Result<usize> {
+    let records = recorder().drain();
+    std::fs::write(path, chrome_trace(&records).encode())?;
+    Ok(records.len())
+}
+
+/// Writes the Chrome trace to `$PALLAS_TRACE_OUT` when set (bench and
+/// scripting hook). Returns the records written, or `None` when the
+/// variable is unset or the write fails (failure is reported on stderr,
+/// never fatal).
+pub fn write_from_env() -> Option<usize> {
+    let path = std::env::var("PALLAS_TRACE_OUT").ok()?;
+    match write_chrome_file(&path) {
+        Ok(n) => {
+            println!("[trace] wrote {path} ({n} records)");
+            Some(n)
+        }
+        Err(e) => {
+            eprintln!("trace: cannot write {path}: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::parse;
+
+    fn rec(name: &str, kind: RecordKind, ts: u64) -> TraceRecord {
+        TraceRecord {
+            name: name.into(),
+            label: Some("k=1".into()),
+            kind,
+            ts_us: ts,
+            dur_us: if kind == RecordKind::Span { 5 } else { 0 },
+            tid: 1,
+            depth: 0,
+        }
+    }
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let ring = TraceRing::new(8);
+        for i in 0..5 {
+            ring.record(rec("a.b", RecordKind::Span, i));
+        }
+        assert_eq!(ring.len(), 5);
+        let drained = ring.drain();
+        assert_eq!(drained.len(), 5);
+        assert!(drained.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let ring = TraceRing::new(4);
+        for i in 0..10 {
+            ring.record(rec("a", RecordKind::Span, i));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.dropped(), 6);
+        // Oldest evicted: the survivors are the last four.
+        let recs = ring.snapshot();
+        assert_eq!(recs.first().unwrap().ts_us, 6);
+        assert_eq!(recs.last().unwrap().ts_us, 9);
+        // Drain resets the dropped counter.
+        ring.drain();
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let ring = TraceRing::new(0);
+        ring.record(rec("a", RecordKind::Span, 1));
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_required_keys() {
+        let records = vec![
+            rec("path.screen", RecordKind::Span, 10),
+            rec("screening.violation", RecordKind::Instant, 12),
+        ];
+        let doc = chrome_trace(&records);
+        let parsed = parse(&doc.encode()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let span = &events[0];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("cat").unwrap().as_str(), Some("path"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(10.0));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(5.0));
+        assert!(span.get("pid").is_some() && span.get("tid").is_some());
+        let inst = &events[1];
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+        assert!(inst.get("dur").is_none());
+    }
+
+    #[test]
+    fn jsonl_one_object_per_line() {
+        let records =
+            vec![rec("a", RecordKind::Span, 1), rec("b", RecordKind::Instant, 2)];
+        let text = to_jsonl(&records);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = parse(line).unwrap();
+            assert!(v.get("name").is_some());
+            assert!(v.get("ts_us").is_some());
+        }
+    }
+
+    #[test]
+    fn thread_ids_are_distinct_and_stable() {
+        let here = thread_id();
+        assert_eq!(here, thread_id());
+        let other = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(here, other);
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}
