@@ -73,8 +73,8 @@ COMMANDS:
             [--trace-out FILE]
   path      regularization path with sequential screening
             --data ... [--steps 30] [--min-frac 0.05] [--rule ...]
-            [--solver ...] [--tol ...] [--csv FILE] [--trace-out FILE]
-            [--audit]
+            [--solver ...] [--tol ...] [--workers N] [--csv FILE]
+            [--trace-out FILE] [--audit]
   serve     start the screening service
             --data ... [--addr 127.0.0.1:7878] [--workers N]
   help      this text

@@ -152,6 +152,7 @@ impl RunConfig {
             solver: self.solver,
             solve: self.solve_options(),
             audit: self.audit,
+            workers: self.workers,
             ..Default::default()
         }
     }

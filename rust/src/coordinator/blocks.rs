@@ -19,19 +19,35 @@ pub fn fixed(m: usize, block: usize) -> Vec<Range<usize>> {
 /// approximately equal, so sparse text data with skewed column sizes
 /// (Zipf!) doesn't leave workers idle.
 pub fn balanced<X: FeatureMatrix>(x: &X, n_blocks: usize) -> Vec<Range<usize>> {
+    balanced_with(x, n_blocks, None)
+}
+
+/// [`balanced`] with the per-column nnz optionally served from a
+/// prebuilt slice (e.g. [`crate::data::cache::FeatureCache::col_nnz`])
+/// instead of per-column backend calls.
+pub fn balanced_with<X: FeatureMatrix>(
+    x: &X,
+    n_blocks: usize,
+    col_nnz: Option<&[usize]>,
+) -> Vec<Range<usize>> {
     let m = x.n_features();
     let n_blocks = n_blocks.max(1).min(m.max(1));
     if m == 0 {
         return Vec::new();
     }
+    debug_assert!(col_nnz.is_none_or(|c| c.len() == m));
+    let nnz_of = |j: usize| match col_nnz {
+        Some(c) => c[j],
+        None => x.col_nnz(j),
+    };
     // +1 per column so all-zero stretches still split.
-    let total: usize = (0..m).map(|j| x.col_nnz(j) + 1).sum();
+    let total: usize = (0..m).map(|j| nnz_of(j) + 1).sum();
     let target = total.div_ceil(n_blocks);
     let mut out = Vec::with_capacity(n_blocks);
     let mut start = 0;
     let mut acc = 0usize;
     for j in 0..m {
-        acc += x.col_nnz(j) + 1;
+        acc += nnz_of(j) + 1;
         if acc >= target && out.len() + 1 < n_blocks {
             out.push(start..j + 1);
             start = j + 1;
@@ -75,6 +91,16 @@ mod tests {
         let max = *nnz.iter().max().unwrap();
         let min = *nnz.iter().min().unwrap();
         assert!(max <= 3 * min.max(1) + 200, "imbalance {nnz:?}");
+    }
+
+    #[test]
+    fn balanced_with_cached_nnz_matches() {
+        let ds = SynthSpec::text(60, 300, 135).generate();
+        let cache = crate::data::cache::FeatureCache::build(&ds.x, &ds.y);
+        assert_eq!(
+            balanced(&ds.x, 6),
+            balanced_with(&ds.x, 6, Some(&cache.col_nnz))
+        );
     }
 
     #[test]

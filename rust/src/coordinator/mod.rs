@@ -14,5 +14,5 @@ pub mod pool;
 pub mod protocol;
 pub mod server;
 
-pub use parallel::screen_all_parallel;
+pub use parallel::{screen_all_parallel, screen_all_parallel_with};
 pub use pool::{parallel_map, ThreadPool};

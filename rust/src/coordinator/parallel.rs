@@ -6,10 +6,13 @@
 
 use crate::coordinator::blocks;
 use crate::coordinator::pool::parallel_map;
+use crate::data::cache::FeatureCache;
 use crate::data::FeatureMatrix;
 use crate::error::Result;
 use crate::screening::precompute::{FeatureStats, SharedContext};
-use crate::screening::rule::{Rule, RuleKind, ScreenReport, ScreeningRule, KEEP_THRESHOLD};
+use crate::screening::rule::{
+    record_screen_telemetry, Rule, RuleKind, ScreenReport, ScreeningRule, KEEP_THRESHOLD,
+};
 
 /// Minimum `nnz + m` for which multi-threaded screening pays for its
 /// thread-spawn cost (measured on this container: a 50k-feature sparse
@@ -32,20 +35,43 @@ pub fn screen_all_parallel<X: FeatureMatrix + Sync>(
     lambda2: f64,
     workers: usize,
 ) -> Result<ScreenReport> {
+    screen_all_parallel_with(rule, x, y, theta1, lambda1, lambda2, workers, None)
+}
+
+/// [`screen_all_parallel`] with an optional [`FeatureCache`]: per-feature
+/// stats come from the cache (one θ-dot instead of the four-way panel),
+/// the work-threshold check reads the cached total nnz instead of
+/// re-deriving it, and the block partitioner reads the cached per-column
+/// nnz. Bit-identical to the uncached and sequential paths.
+#[allow(clippy::too_many_arguments)]
+pub fn screen_all_parallel_with<X: FeatureMatrix + Sync>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2: f64,
+    workers: usize,
+    cache: Option<&FeatureCache>,
+) -> Result<ScreenReport> {
     let t0 = std::time::Instant::now();
     let m = x.n_features();
     let mut keep = vec![true; m];
     let mut bounds = vec![f64::INFINITY; m];
-    let work = x.nnz() + m;
+    let work = cache.map(|c| c.nnz).unwrap_or_else(|| x.nnz()) + m;
     let workers = if work < PARALLEL_WORK_THRESHOLD { 1 } else { workers.max(1) };
     if rule != RuleKind::None && m > 0 {
         let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
         let r = Rule(rule);
-        let ranges = blocks::balanced(x, workers * 4);
+        let ranges =
+            blocks::balanced_with(x, workers * 4, cache.map(|c| c.col_nnz.as_slice()));
         let results = parallel_map(&ranges, workers, |range| {
             let mut local = Vec::with_capacity(range.len());
             for j in range.clone() {
-                let s = FeatureStats::compute(x, j, y, &ctx.ytheta1);
+                let s = match cache {
+                    Some(c) => FeatureStats::from_cache(x, c, j, &ctx.ytheta1),
+                    None => FeatureStats::compute(x, j, y, &ctx.ytheta1),
+                };
                 local.push(r.score(&ctx, &s));
             }
             local
@@ -57,14 +83,19 @@ pub fn screen_all_parallel<X: FeatureMatrix + Sync>(
             }
         }
     }
-    Ok(ScreenReport {
+    let report = ScreenReport {
         rule,
         lambda1,
         lambda2,
         keep,
         bounds,
         seconds: t0.elapsed().as_secs_f64(),
-    })
+    };
+    // Same sweep-amortization semantics as screen_all: one report = one
+    // O(nnz) data pass. (Parallel sweeps were previously invisible to
+    // the screening.* counters/histograms.)
+    record_screen_telemetry(&report, 1);
+    Ok(report)
 }
 
 #[cfg(test)]

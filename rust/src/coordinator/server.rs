@@ -41,7 +41,7 @@ use crate::coordinator::batcher::{next_batch, BatchPolicy};
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::protocol::{parse, Json};
 use crate::error::{Error, Result};
-use crate::screening::rule::{screen_multi, RuleKind};
+use crate::screening::rule::{screen_multi_with, RuleKind};
 use crate::solver::api::{solve, SolveOptions, SolverKind};
 use crate::svm::problem::Problem;
 use crate::telemetry::{self, Counter, Histogram};
@@ -275,13 +275,16 @@ fn run_screen_batch(shared: &Shared, batch: Vec<ScreenJob>) {
             "server.batch",
             Some(format!("{batch_size} request(s)")),
         );
-        let result = screen_multi(
+        // The problem cache makes each batched sweep a single θ-dot per
+        // feature (λ-independent stats are shared across all requests).
+        let result = screen_multi_with(
             shared.rule,
             &shared.problem.x,
             &shared.problem.y,
             &state.theta1,
             state.lambda1,
             &lambda2s,
+            Some(shared.problem.cache()),
         );
         drop(span);
         match result {

@@ -1,0 +1,169 @@
+//! Path-wide per-feature statistics cache.
+//!
+//! Three of the four dots the screening bound consumes — `fᵀy`, `fᵀ1`,
+//! `‖f‖²` — and the per-column nnz are *λ- and θ-independent*: along a
+//! regularization path (or across batched server requests) they never
+//! change, yet the uncached pipeline re-derives them inside every
+//! `col_dot4` sweep and every CD solve's curvature precompute.
+//! [`FeatureCache`] materializes them in **one** O(nnz) pass so that:
+//!
+//! * screening shrinks to a single θ-dependent dot per feature
+//!   ([`crate::screening::precompute::FeatureStats::from_cache`]),
+//! * coordinate descent serves its curvature vector `H_j = ‖f_j‖²`
+//!   straight from the cache,
+//! * the block partitioner and the parallel-work threshold read nnz
+//!   without re-scanning columns.
+//!
+//! Lifecycle: built once per [`crate::svm::problem::Problem`] (lazily,
+//! on first use), then **remapped** — not recomputed — every time a
+//! reduced problem selects a column subset ([`FeatureCache::select`]).
+//!
+//! ## Bit-identity contract
+//!
+//! Cached screening must be *bit-identical* to the uncached
+//! `col_dot4` path (the parallel/sequential equivalence tests assert
+//! exact equality). `col_dot4` accumulates its four sums in
+//! independent accumulators, each in column-entry order; the cache
+//! builder reproduces exactly that accumulation per statistic (via
+//! [`FeatureMatrix::col_visit`], which walks entries in the same
+//! order), so `dot_y`/`dot_one`/`norm_sq` match the `col_dot4`
+//! accumulators to the last ulp. The remaining θ-dot uses
+//! [`FeatureMatrix::col_dot_seq`], the in-order variant matching
+//! `col_dot4`'s third accumulator (the unrolled `col_dot` reassociates
+//! and may differ in the last ulp on dense data).
+
+use super::FeatureMatrix;
+
+/// Per-column λ-independent statistics for an `n × m` feature matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureCache {
+    /// `f_jᵀ y` per column.
+    pub dot_y: Vec<f64>,
+    /// `f_jᵀ 1` (entry sum) per column.
+    pub dot_one: Vec<f64>,
+    /// `‖f_j‖²` per column — the CD curvature vector `H`.
+    pub norm_sq: Vec<f64>,
+    /// Stored entries per column (CSC column length; `n` for dense).
+    pub col_nnz: Vec<usize>,
+    /// Total stored entries (Σ `col_nnz`).
+    pub nnz: usize,
+}
+
+impl FeatureCache {
+    /// Builds the cache in one pass over the stored entries of `x`.
+    pub fn build<X: FeatureMatrix>(x: &X, y: &[f64]) -> Self {
+        let m = x.n_features();
+        debug_assert_eq!(y.len(), x.n_samples());
+        let mut dot_y = Vec::with_capacity(m);
+        let mut dot_one = Vec::with_capacity(m);
+        let mut norm_sq = Vec::with_capacity(m);
+        let mut col_nnz = Vec::with_capacity(m);
+        let mut nnz = 0usize;
+        for j in 0..m {
+            // Independent accumulators in entry order: bitwise the same
+            // sums as col_dot4's dy/d1/qq (see module docs).
+            let (mut sy, mut s1, mut sq, mut k) = (0.0f64, 0.0f64, 0.0f64, 0usize);
+            x.col_visit(j, &mut |i, v| {
+                sy += v * y[i];
+                s1 += v;
+                sq += v * v;
+                k += 1;
+            });
+            dot_y.push(sy);
+            dot_one.push(s1);
+            norm_sq.push(sq);
+            col_nnz.push(k);
+            nnz += k;
+        }
+        FeatureCache { dot_y, dot_one, norm_sq, col_nnz, nnz }
+    }
+
+    /// Number of cached columns.
+    pub fn len(&self) -> usize {
+        self.col_nnz.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.col_nnz.is_empty()
+    }
+
+    /// Remaps the cache onto a column subset (`cols` are indices into
+    /// *this* cache): the reduced-problem analogue of a fresh build,
+    /// at O(|cols|) instead of O(nnz).
+    pub fn select(&self, cols: &[usize]) -> FeatureCache {
+        let mut out = FeatureCache {
+            dot_y: Vec::with_capacity(cols.len()),
+            dot_one: Vec::with_capacity(cols.len()),
+            norm_sq: Vec::with_capacity(cols.len()),
+            col_nnz: Vec::with_capacity(cols.len()),
+            nnz: 0,
+        };
+        for &j in cols {
+            out.dot_y.push(self.dot_y[j]);
+            out.dot_one.push(self.dot_one[j]);
+            out.norm_sq.push(self.norm_sq[j]);
+            out.col_nnz.push(self.col_nnz[j]);
+            out.nnz += self.col_nnz[j];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csc::CscMatrix;
+    use crate::data::dense::DenseMatrix;
+    use crate::data::synth::SynthSpec;
+    use crate::data::FeatureData;
+
+    /// The cache must reproduce `col_dot4`'s λ-independent accumulators
+    /// and `nnz` exactly, on both backends.
+    #[test]
+    fn matches_col_dot4_bitwise() {
+        for ds in [
+            SynthSpec::dense(40, 30, 171).generate(),
+            SynthSpec::text(60, 120, 172).generate(),
+        ] {
+            let cache = FeatureCache::build(&ds.x, &ds.y);
+            let theta = vec![0.0; ds.n()];
+            for j in 0..ds.m() {
+                let (dy, d1, _, qq) = ds.x.col_dot4(j, &ds.y, &theta);
+                assert_eq!(cache.dot_y[j], dy, "{} col {j} dot_y", ds.name);
+                assert_eq!(cache.dot_one[j], d1, "{} col {j} dot_one", ds.name);
+                assert_eq!(cache.norm_sq[j], qq, "{} col {j} norm_sq", ds.name);
+                assert_eq!(cache.col_nnz[j], ds.x.col_nnz(j));
+            }
+            assert_eq!(cache.nnz, ds.x.nnz());
+            assert_eq!(cache.len(), ds.m());
+            assert!(!cache.is_empty());
+        }
+    }
+
+    #[test]
+    fn select_remaps() {
+        let x = FeatureData::Sparse(CscMatrix::from_triplet_cols(
+            3,
+            vec![vec![(0, 1.0), (2, 2.0)], vec![(1, 3.0)], vec![(0, -1.0)]],
+        ));
+        let y = vec![1.0, -1.0, 1.0];
+        let cache = FeatureCache::build(&x, &y);
+        let sub = cache.select(&[2, 0]);
+        assert_eq!(sub.dot_y, vec![cache.dot_y[2], cache.dot_y[0]]);
+        assert_eq!(sub.norm_sq, vec![1.0, 5.0]);
+        assert_eq!(sub.col_nnz, vec![1, 2]);
+        assert_eq!(sub.nnz, 3);
+    }
+
+    #[test]
+    fn dense_counts_stored_cells() {
+        let x = DenseMatrix::from_cols(3, vec![vec![1.0, 0.0, 2.0]]);
+        let cache = FeatureCache::build(&x, &[1.0, 1.0, -1.0]);
+        assert_eq!(cache.col_nnz, vec![3]); // stored entries, zeros included
+        assert_eq!(cache.nnz, 3);
+        assert_eq!(cache.norm_sq, vec![5.0]);
+        assert_eq!(cache.dot_one, vec![3.0]);
+        assert_eq!(cache.dot_y, vec![-1.0]);
+    }
+}

@@ -116,13 +116,43 @@ impl CscMatrix {
     }
 
     /// Extracts the submatrix keeping only the listed feature columns.
+    ///
+    /// Direct slice copies: source columns are already sorted and
+    /// deduplicated, so no triplet round-trip is needed — this is the
+    /// per-step gather of the path runner and must cost O(copied nnz).
     pub fn select_cols(&self, cols: &[usize]) -> CscMatrix {
-        let mut out_cols = Vec::with_capacity(cols.len());
+        let total: usize = cols.iter().map(|&j| self.indptr[j + 1] - self.indptr[j]).sum();
+        let mut indptr = Vec::with_capacity(cols.len() + 1);
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        indptr.push(0);
         for &j in cols {
             let (idx, val) = self.col(j);
-            out_cols.push(idx.iter().copied().zip(val.iter().copied()).collect());
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(val);
+            indptr.push(indices.len());
         }
-        CscMatrix::from_triplet_cols(self.n, out_cols)
+        CscMatrix { n: self.n, m: cols.len(), indptr, indices, values }
+    }
+
+    /// Horizontal concatenation of column-wise pieces sharing `n`. Used
+    /// by the pool-parallel gather to reassemble per-chunk selections.
+    pub fn hconcat(parts: &[CscMatrix]) -> CscMatrix {
+        let n = parts.first().map(|p| p.n).unwrap_or(0);
+        let m: usize = parts.iter().map(|p| p.m).sum();
+        let total: usize = parts.iter().map(|p| p.values.len()).sum();
+        let mut indptr = Vec::with_capacity(m + 1);
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
+        indptr.push(0);
+        for p in parts {
+            assert_eq!(p.n, n, "sample-count mismatch in hconcat");
+            let base = indices.len();
+            indices.extend_from_slice(&p.indices);
+            values.extend_from_slice(&p.values);
+            indptr.extend(p.indptr[1..].iter().map(|k| base + k));
+        }
+        CscMatrix { n, m, indptr, indices, values }
     }
 
     /// Scales every column to unit L2 norm; returns the scale factors.
@@ -160,6 +190,11 @@ impl FeatureMatrix for CscMatrix {
             acc += x * v[*i as usize];
         }
         acc
+    }
+    fn col_dot_seq(&self, j: usize, v: &[f64]) -> f64 {
+        // CSC col_dot is already in-order; repeated here to skip the
+        // trait default's dyn-dispatch col_visit on the hot θ-dot.
+        self.col_dot(j, v)
     }
     fn col_dot4(&self, j: usize, y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64) {
         debug_assert_eq!(y.len(), self.n);
@@ -286,5 +321,30 @@ mod tests {
         let sub = x.select_cols(&[1]);
         assert_eq!(sub.n_features(), 1);
         assert!((sub.col_norm_sq(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hconcat_rebuilds_selection() {
+        let x = CscMatrix::from_triplet_cols(
+            3,
+            vec![
+                vec![(0, 1.0), (2, 2.0)],
+                vec![(1, 3.0)],
+                vec![],
+                vec![(0, -1.0), (1, 4.0)],
+            ],
+        );
+        let whole = x.select_cols(&[0, 1, 2, 3]);
+        let glued = CscMatrix::hconcat(&[x.select_cols(&[0, 1]), x.select_cols(&[2, 3])]);
+        assert_eq!(glued, whole);
+        assert_eq!(glued, x);
+        assert_eq!(CscMatrix::hconcat(&[]).n_features(), 0);
+    }
+
+    #[test]
+    fn nnz_is_total_stored() {
+        let x = toy();
+        assert_eq!(x.nnz(), 3);
+        assert_eq!(x.select_cols(&[0]).nnz(), 2);
     }
 }

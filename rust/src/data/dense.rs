@@ -99,6 +99,20 @@ impl DenseMatrix {
         }
         out
     }
+
+    /// Horizontal concatenation: stacks the columns of `parts` left to
+    /// right (all parts must share the sample count). Used by the
+    /// pool-parallel column gather to reassemble per-chunk selections.
+    pub fn hconcat(parts: &[DenseMatrix]) -> DenseMatrix {
+        let n = parts.first().map(|p| p.n).unwrap_or(0);
+        let m: usize = parts.iter().map(|p| p.m).sum();
+        let mut data = Vec::with_capacity(n * m);
+        for p in parts {
+            assert_eq!(p.n, n, "sample-count mismatch in hconcat");
+            data.extend_from_slice(&p.data);
+        }
+        DenseMatrix { n, m, data }
+    }
 }
 
 impl FeatureMatrix for DenseMatrix {
@@ -115,6 +129,17 @@ impl FeatureMatrix for DenseMatrix {
     }
     fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         linalg::dot(self.col(j), v)
+    }
+    fn col_dot_seq(&self, j: usize, v: &[f64]) -> f64 {
+        // In-order (non-unrolled) accumulation: must match col_dot4's
+        // per-accumulator order bitwise — see the trait docs.
+        let col = self.col(j);
+        debug_assert_eq!(col.len(), v.len());
+        let mut acc = 0.0;
+        for i in 0..col.len() {
+            acc += col[i] * v[i];
+        }
+        acc
     }
     fn col_dot4(&self, j: usize, y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64) {
         linalg::dot4(self.col(j), y, theta)
@@ -139,6 +164,10 @@ impl FeatureMatrix for DenseMatrix {
     }
     fn col_norm_sq(&self, j: usize) -> f64 {
         linalg::nrm2_sq(self.col(j))
+    }
+    fn nnz(&self) -> usize {
+        // Dense storage stores every cell: O(1), not the trait's O(m) scan.
+        self.n * self.m
     }
 }
 
@@ -179,6 +208,17 @@ mod tests {
         assert_eq!(s.n_features(), 2);
         assert_eq!(s.col(0), &[3.0, 3.0]);
         assert_eq!(s.col(1), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn hconcat_rebuilds_selection() {
+        let x = DenseMatrix::from_cols(
+            2,
+            vec![vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]],
+        );
+        let glued = DenseMatrix::hconcat(&[x.select_cols(&[0]), x.select_cols(&[1, 2])]);
+        assert_eq!(glued, x);
+        assert_eq!(x.nnz(), 6); // O(1) override: stored cells
     }
 
     #[test]

@@ -8,11 +8,14 @@
 //! [`dense::DenseMatrix`] stores column-major, [`csc::CscMatrix`] is
 //! compressed-sparse-column.
 
+pub mod cache;
 pub mod csc;
 pub mod dataset;
 pub mod dense;
 pub mod libsvm;
 pub mod synth;
+
+pub use cache::FeatureCache;
 
 /// Column-oriented access to a feature matrix (n samples × m features).
 ///
@@ -32,6 +35,18 @@ pub trait FeatureMatrix {
 
     /// Dot product of feature column `j` with a dense vector `v` (len n).
     fn col_dot(&self, j: usize, v: &[f64]) -> f64;
+
+    /// Like [`FeatureMatrix::col_dot`], but with strictly *in-order*
+    /// accumulation — bitwise-matching the corresponding accumulator of
+    /// [`FeatureMatrix::col_dot4`]. Cached screening
+    /// ([`cache::FeatureCache`]) relies on this exact-match guarantee;
+    /// plain `col_dot` may reassociate (the dense backend unrolls
+    /// 4-way) and differ in the last ulp.
+    fn col_dot_seq(&self, j: usize, v: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        self.col_visit(j, &mut |i, x| acc += x * v[i]);
+        acc
+    }
 
     /// The per-feature statistics panel in one pass:
     /// `(f_jᵀ y, f_jᵀ 1, f_jᵀ theta, ‖f_j‖²)`.
@@ -118,7 +133,7 @@ pub trait FeatureMatrix {
 }
 
 /// Owning dense-or-sparse feature storage with static dispatch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum FeatureData {
     /// Column-major dense storage.
     Dense(dense::DenseMatrix),
@@ -147,6 +162,9 @@ impl FeatureMatrix for FeatureData {
     }
     fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         dispatch!(self, col_dot(j, v))
+    }
+    fn col_dot_seq(&self, j: usize, v: &[f64]) -> f64 {
+        dispatch!(self, col_dot_seq(j, v))
     }
     fn col_dot4(&self, j: usize, y: &[f64], theta: &[f64]) -> (f64, f64, f64, f64) {
         dispatch!(self, col_dot4(j, y, theta))

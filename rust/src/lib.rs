@@ -35,6 +35,27 @@
 //! println!("{}", report.summary_table());
 //! ```
 //!
+//! ## Path-wide feature cache
+//!
+//! Every [`svm::problem::Problem`] lazily builds a
+//! [`data::cache::FeatureCache`] — one O(nnz) pass materializing the
+//! λ-independent per-column stats (`fᵀy`, `fᵀ1`, `‖f‖²`, nnz). The
+//! cache is built **once per problem** and then *remapped* (never
+//! recomputed) onto every reduced problem along a path. Consumers:
+//! screening sweeps shrink to a single θ-dependent dot per feature,
+//! coordinate descent serves its curvature vector `H_j = ‖f_j‖²` from
+//! the cache, and the block partitioner reads cached nnz. The path
+//! runner also reuses the previous step's reduced matrix whenever the
+//! kept set only tightens ([`solver::reduced::ReducedProblem`]
+//! incremental builds), fanning gathers out over
+//! [`path::runner::PathConfig::workers`] threads (`--workers N`).
+//! Reuse efficacy is metered as `path.cache.hits` /
+//! `path.cache.misses` / `path.gather_bytes` and the
+//! `path.step.gather_seconds` histogram — all visible via
+//! `{"cmd":"stats"}` and the Prometheus rendering. Cached screening is
+//! bit-identical to the uncached path (see the cache module docs for
+//! the accumulation-order contract).
+//!
 //! ## Observability
 //!
 //! Every hot layer (solvers, screening sweeps, path steps, the

@@ -5,6 +5,18 @@
 //! * [`runner`] — the sequential loop: screen(λ_{k−1} → λ_k) → reduced
 //!   solve (warm-started) → map to the dual → next step.
 //! * [`stats`] — per-step records and report tables.
+//!
+//! Each run builds the problem's [`crate::data::cache::FeatureCache`]
+//! once (per-column `fᵀy`, `fᵀ1`, `‖f‖²`, nnz in one O(nnz) pass),
+//! screens with the block-parallel executor
+//! ([`runner::PathConfig::workers`]), and *remaps* the cache onto each
+//! reduced problem instead of recomputing it. When a step's kept set is
+//! a subset of the previous one, the reduced matrix is sub-selected
+//! from the previous *reduced* matrix rather than re-gathered from the
+//! full one; reuse efficacy is metered as `path.cache.hits` /
+//! `path.cache.misses` / `path.gather_bytes` plus the
+//! `path.step.gather_seconds` histogram. All reuse paths are
+//! bit-identical to the from-scratch gather (`incremental: false`).
 
 pub mod grid;
 pub mod runner;

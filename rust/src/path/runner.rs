@@ -19,11 +19,12 @@
 //! carries an O(√gap) error. With the default `tol = 1e−6` (and `1e−9`
 //! for safety audits) no violation was ever observed; T2 quantifies this.
 
+use crate::coordinator::parallel::screen_all_parallel_with;
 use crate::data::FeatureMatrix;
 use crate::error::Result;
 use crate::path::stats::{totals, PathStep, PathTotals};
 use crate::report::table::Table;
-use crate::screening::rule::{screen_all, RuleKind};
+use crate::screening::rule::RuleKind;
 use crate::solver::api::{SolveOptions, SolverKind};
 use crate::solver::reduced::ReducedProblem;
 use crate::svm::problem::Problem;
@@ -45,6 +46,14 @@ pub struct PathConfig {
     /// ([`crate::screening::variants::audit_screen`]). Violations land
     /// in `screening.violations` and each emits an error event.
     pub audit: bool,
+    /// Worker threads for the screening sweeps and column gathers
+    /// (1 = sequential; results are bit-identical either way).
+    pub workers: usize,
+    /// Reuse the previous step's reduced matrix when the kept set is a
+    /// subset of the previous one; reuse efficacy is metered as
+    /// `path.cache.hits` / `path.cache.misses`. Disable only to test
+    /// equivalence against from-scratch gathers.
+    pub incremental: bool,
 }
 
 impl Default for PathConfig {
@@ -55,6 +64,8 @@ impl Default for PathConfig {
             solve: SolveOptions::default(),
             violation_tol: 1e-4,
             audit: false,
+            workers: crate::coordinator::pool::default_workers(),
+            incremental: true,
         }
     }
 }
@@ -122,10 +133,24 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
     let m = problem.m();
     let lmax = problem.lambda_max();
 
+    // Path-wide feature cache: one O(nnz) pass, then every screening
+    // sweep is a single θ-dot per feature and every CD solve gets its
+    // curvature for free.
+    let cache = problem.cache();
+    // Reduced-matrix reuse metrics, registered up front so they show as
+    // zeros in stats snapshots even before the first reduced step.
+    let tele = crate::telemetry::global();
+    let cache_hits = tele.counter("path.cache.hits");
+    let cache_misses = tele.counter("path.cache.misses");
+    let gather_bytes = tele.counter("path.gather_bytes");
+    let gather_seconds = tele.histogram("path.step.gather_seconds");
+
     // Previous solved point: closed form at lambda_max.
     let mut lambda_prev = lmax;
     let mut theta_prev = problem.theta_at_lambda_max().theta();
     let mut w_prev = vec![0.0; m];
+    // Previous step's reduced problem (incremental gather source).
+    let mut prev_red: Option<ReducedProblem> = None;
 
     let mut steps = Vec::with_capacity(grid.len());
     let mut weights = Vec::with_capacity(grid.len());
@@ -137,15 +162,18 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
                 "grid must descend below lambda_max: {lambda} vs prev {lambda_prev}"
             )));
         }
-        // 1. Screen (lambda_prev, theta_prev) -> lambda.
+        // 1. Screen (lambda_prev, theta_prev) -> lambda: block-parallel
+        // executor with the cached λ-independent stats.
         let screen_span = Span::enter("path.screen");
-        let screen = screen_all(
+        let screen = screen_all_parallel_with(
             cfg.rule,
             &problem.x,
             &problem.y,
             &theta_prev,
             lambda_prev,
             lambda,
+            cfg.workers,
+            Some(cache),
         )?;
         let mut kept = screen.kept_indices();
         let screen_seconds = screen.seconds;
@@ -156,17 +184,46 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
         let mut violations = 0usize;
         let (w, b, iterations, rel_gap) = loop {
             let rep = if kept.len() == m {
-                crate::solver::api::solve(
+                crate::solver::api::solve_with_curvature(
                     cfg.solver,
                     &problem.x,
                     &problem.y,
                     lambda,
                     Some(&w_prev),
                     &cfg.solve,
+                    Some(&cache.norm_sq),
                 )?
             } else {
-                let red = ReducedProblem::build(&problem.x, kept.clone())?;
-                red.solve(cfg.solver, &problem.y, lambda, Some(&w_prev), &cfg.solve)?
+                let t_gather = std::time::Instant::now();
+                let (red, reused) = match prev_red.as_ref().filter(|_| cfg.incremental) {
+                    Some(prev) => ReducedProblem::build_incremental(
+                        prev,
+                        &problem.x,
+                        kept.clone(),
+                        Some(cache),
+                        cfg.workers,
+                    )?,
+                    None => (
+                        ReducedProblem::build_with(
+                            &problem.x,
+                            kept.clone(),
+                            Some(cache),
+                            cfg.workers,
+                        )?,
+                        false,
+                    ),
+                };
+                gather_seconds.record(t_gather.elapsed().as_secs_f64());
+                if reused {
+                    cache_hits.inc();
+                } else {
+                    cache_misses.inc();
+                }
+                gather_bytes.add(red.gathered_bytes());
+                let rep =
+                    red.solve(cfg.solver, &problem.y, lambda, Some(&w_prev), &cfg.solve)?;
+                prev_red = Some(red);
+                rep
             };
 
             // 3. Unsafe-rule repair loop: verify discarded features.

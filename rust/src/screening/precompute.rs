@@ -8,6 +8,7 @@
 //! [`crate::data::FeatureMatrix::col_dot4`] natively, or by the Pallas
 //! panel kernel on the PJRT path).
 
+use crate::data::cache::FeatureCache;
 use crate::data::FeatureMatrix;
 use crate::error::{Error, Result};
 use crate::linalg::{proj_null_dot, proj_null_norm_sq};
@@ -48,6 +49,27 @@ impl FeatureStats {
         // col_dot4 returns (f·y, f·1, f·ytheta1, ‖f‖²)
         let (f_y, f_1, f_yt, q) = x.col_dot4(j, y, ytheta1);
         FeatureStats { dy: f_1, d1: f_y, dt: f_yt, q }
+    }
+
+    /// [`FeatureStats::compute`] with the λ/θ-independent stats served
+    /// from a [`FeatureCache`]: one θ-dependent dot (`fᵀ(y∘θ₁)`) instead
+    /// of the four-way panel. Bit-identical to `compute` — the cache
+    /// stores `col_dot4`'s own accumulators and the θ-dot uses the
+    /// in-order [`FeatureMatrix::col_dot_seq`] (see the cache module
+    /// docs for the contract).
+    pub fn from_cache<X: FeatureMatrix>(
+        x: &X,
+        cache: &FeatureCache,
+        j: usize,
+        ytheta1: &[f64],
+    ) -> Self {
+        // Same mapping as `compute`: dy = f̂ᵀy = fᵀ1, d1 = f̂ᵀ1 = fᵀy.
+        FeatureStats {
+            dy: cache.dot_one[j],
+            d1: cache.dot_y[j],
+            dt: x.col_dot_seq(j, ytheta1),
+            q: cache.norm_sq[j],
+        }
     }
 }
 

@@ -4,6 +4,7 @@
 use super::paper;
 use super::precompute::{FeatureStats, SharedContext};
 use super::variants;
+use crate::data::cache::FeatureCache;
 use crate::data::FeatureMatrix;
 use crate::error::Result;
 
@@ -151,6 +152,22 @@ pub fn screen_all<X: FeatureMatrix>(
     lambda1: f64,
     lambda2: f64,
 ) -> Result<ScreenReport> {
+    screen_all_with(rule, x, y, theta1, lambda1, lambda2, None)
+}
+
+/// [`screen_all`] with an optional [`FeatureCache`]: the λ-independent
+/// stats (`f̂ᵀy`, `f̂ᵀ1`, `‖f̂‖²`) are served from the cache, shrinking
+/// the per-feature work to the single θ-dependent dot. Bit-identical to
+/// the uncached path (asserted by the `cache` integration tests).
+pub fn screen_all_with<X: FeatureMatrix>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2: f64,
+    cache: Option<&FeatureCache>,
+) -> Result<ScreenReport> {
     let t0 = std::time::Instant::now();
     let m = x.n_features();
     let mut keep = vec![true; m];
@@ -159,7 +176,10 @@ pub fn screen_all<X: FeatureMatrix>(
         let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
         let r = Rule(rule);
         for j in 0..m {
-            let s = FeatureStats::compute(x, j, y, &ctx.ytheta1);
+            let s = match cache {
+                Some(c) => FeatureStats::from_cache(x, c, j, &ctx.ytheta1),
+                None => FeatureStats::compute(x, j, y, &ctx.ytheta1),
+            };
             let score = r.score(&ctx, &s);
             bounds[j] = score;
             keep[j] = score >= KEEP_THRESHOLD;
@@ -182,7 +202,7 @@ pub fn screen_all<X: FeatureMatrix>(
 /// histogram. `sweeps` is the number of O(nnz) data passes the report
 /// amortizes (1 for [`screen_all`]; `1/k`-shared for [`screen_multi`],
 /// which calls this once per target with `sweeps = 0` after the first).
-fn record_screen_telemetry(report: &ScreenReport, sweeps: u64) {
+pub(crate) fn record_screen_telemetry(report: &ScreenReport, sweeps: u64) {
     use crate::telemetry::BucketSpec;
     let tele = crate::telemetry::global();
     let name = report.rule.name();
@@ -232,13 +252,28 @@ pub fn screen_multi<X: FeatureMatrix>(
     lambda1: f64,
     lambda2s: &[f64],
 ) -> Result<Vec<ScreenReport>> {
+    screen_multi_with(rule, x, y, theta1, lambda1, lambda2s, None)
+}
+
+/// [`screen_multi`] with an optional [`FeatureCache`] (same semantics as
+/// [`screen_all_with`]): the batch's shared data pass shrinks to the
+/// θ-dot alone.
+pub fn screen_multi_with<X: FeatureMatrix>(
+    rule: RuleKind,
+    x: &X,
+    y: &[f64],
+    theta1: &[f64],
+    lambda1: f64,
+    lambda2s: &[f64],
+    cache: Option<&FeatureCache>,
+) -> Result<Vec<ScreenReport>> {
     let t0 = std::time::Instant::now();
     let m = x.n_features();
     let k = lambda2s.len();
     if rule == RuleKind::None || k == 0 {
         return lambda2s
             .iter()
-            .map(|&l2| screen_all(rule, x, y, theta1, lambda1, l2))
+            .map(|&l2| screen_all_with(rule, x, y, theta1, lambda1, l2, cache))
             .collect();
     }
     let ctxs: Vec<SharedContext> = lambda2s
@@ -250,7 +285,10 @@ pub fn screen_multi<X: FeatureMatrix>(
     let mut bounds = vec![vec![f64::INFINITY; m]; k];
     for j in 0..m {
         // One data pass, shared by all targets (ytheta1 identical per ctx).
-        let s = FeatureStats::compute(x, j, y, &ctxs[0].ytheta1);
+        let s = match cache {
+            Some(c) => FeatureStats::from_cache(x, c, j, &ctxs[0].ytheta1),
+            None => FeatureStats::compute(x, j, y, &ctxs[0].ytheta1),
+        };
         for (t, ctx) in ctxs.iter().enumerate() {
             let score = r.score(ctx, &s);
             bounds[t][j] = score;

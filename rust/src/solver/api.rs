@@ -135,12 +135,30 @@ pub fn solve<X: FeatureMatrix>(
     w0: Option<&[f64]>,
     opts: &SolveOptions,
 ) -> Result<SolveReport> {
+    solve_with_curvature(kind, x, y, lambda, w0, opts, None)
+}
+
+/// [`solve`] with an optional precomputed per-column curvature vector
+/// `H_j = ‖f_j‖²` (length m), e.g. from a path-wide
+/// [`crate::data::cache::FeatureCache`]. CD skips its O(nnz) per-solve
+/// column-norm pass and uses the slice; FISTA ignores it (its Lipschitz
+/// estimate is a power iteration over the whole matrix).
+pub fn solve_with_curvature<X: FeatureMatrix>(
+    kind: SolverKind,
+    x: &X,
+    y: &[f64],
+    lambda: f64,
+    w0: Option<&[f64]>,
+    opts: &SolveOptions,
+    curvature: Option<&[f64]>,
+) -> Result<SolveReport> {
     let _span = crate::telemetry::Span::enter_labeled(
         format!("solver.{}", kind.name()),
         Some(format!("lambda={lambda:.4e}")),
     );
     match kind {
-        SolverKind::Cd => crate::solver::cd::CdSolver::default().solve(x, y, lambda, w0, opts),
+        SolverKind::Cd => crate::solver::cd::CdSolver::default()
+            .solve_with_curvature(x, y, lambda, w0, opts, curvature),
         SolverKind::Fista => {
             crate::solver::fista::FistaSolver::default().solve(x, y, lambda, w0, opts)
         }

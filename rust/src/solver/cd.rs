@@ -67,6 +67,24 @@ impl Solver for CdSolver {
         w0: Option<&[f64]>,
         opts: &SolveOptions,
     ) -> Result<SolveReport> {
+        self.solve_with_curvature(x, y, lambda, w0, opts, None)
+    }
+}
+
+impl CdSolver {
+    /// [`Solver::solve`] with the curvature vector `H_j = ‖f_j‖²`
+    /// optionally supplied by the caller (e.g. the path-wide
+    /// [`crate::data::cache::FeatureCache`]), skipping the per-solve
+    /// O(nnz) column-norm pass.
+    pub fn solve_with_curvature<X: FeatureMatrix>(
+        &self,
+        x: &X,
+        y: &[f64],
+        lambda: f64,
+        w0: Option<&[f64]>,
+        opts: &SolveOptions,
+        curvature: Option<&[f64]>,
+    ) -> Result<SolveReport> {
         let t0 = std::time::Instant::now();
         let n = x.n_samples();
         let m = x.n_features();
@@ -87,8 +105,20 @@ impl Solver for CdSolver {
             None => vec![0.0; m],
         };
 
-        // Precompute column curvature bounds.
-        let h: Vec<f64> = (0..m).map(|j| x.col_norm_sq(j)).collect();
+        // Column curvature bounds: caller-provided or a per-solve pass.
+        let h_storage;
+        let h: &[f64] = match curvature {
+            Some(h) => {
+                if h.len() != m {
+                    return Err(Error::solver("curvature length mismatch"));
+                }
+                h
+            }
+            None => {
+                h_storage = (0..m).map(|j| x.col_norm_sq(j)).collect::<Vec<f64>>();
+                &h_storage
+            }
+        };
 
         // Scores z = Xw and exact bias.
         let mut z = vec![0.0; n];

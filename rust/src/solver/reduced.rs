@@ -5,9 +5,16 @@
 //! optimum, so `solve(reduced) ⊕ zeros = solve(full)` — exactly the
 //! property the safety tests assert.
 
-use crate::data::{FeatureData, FeatureMatrix};
+use crate::coordinator::pool::parallel_map;
+use crate::data::cache::FeatureCache;
+use crate::data::{csc::CscMatrix, dense::DenseMatrix, FeatureData, FeatureMatrix};
 use crate::error::{Error, Result};
-use crate::solver::api::{solve, SolveOptions, SolveReport, SolverKind};
+use crate::solver::api::{solve_with_curvature, SolveOptions, SolveReport, SolverKind};
+
+/// Below this many kept columns a parallel gather costs more in thread
+/// spawn than it saves (same rationale as the screening executor's
+/// `PARALLEL_WORK_THRESHOLD`).
+const PARALLEL_GATHER_MIN_COLS: usize = 512;
 
 /// A subproblem over a subset of feature columns.
 #[derive(Debug, Clone)]
@@ -18,22 +25,117 @@ pub struct ReducedProblem {
     pub m_full: usize,
     /// The extracted feature submatrix.
     pub x: FeatureData,
+    /// Per-column stats remapped from the parent cache (when built with
+    /// one): serves the CD curvature vector without an O(nnz) pass.
+    pub cache: Option<FeatureCache>,
+}
+
+/// Gathers the listed columns, fanning out over the pool when the kept
+/// set is large. Chunks are contiguous slices of `cols` reassembled in
+/// order, so the result is byte-identical to the sequential gather.
+fn gather(x: &FeatureData, cols: &[usize], workers: usize) -> FeatureData {
+    if workers <= 1 || cols.len() < PARALLEL_GATHER_MIN_COLS {
+        return match x {
+            FeatureData::Dense(d) => FeatureData::Dense(d.select_cols(cols)),
+            FeatureData::Sparse(s) => FeatureData::Sparse(s.select_cols(cols)),
+        };
+    }
+    let chunk = cols.len().div_ceil(workers * 4).max(1);
+    let chunks: Vec<&[usize]> = cols.chunks(chunk).collect();
+    match x {
+        FeatureData::Dense(d) => {
+            let parts = parallel_map(&chunks, workers, |c| d.select_cols(c));
+            FeatureData::Dense(DenseMatrix::hconcat(&parts))
+        }
+        FeatureData::Sparse(s) => {
+            let parts = parallel_map(&chunks, workers, |c| s.select_cols(c));
+            FeatureData::Sparse(CscMatrix::hconcat(&parts))
+        }
+    }
 }
 
 impl ReducedProblem {
     /// Extracts the kept columns from `x`.
-    pub fn build(x: &FeatureData, mut cols: Vec<usize>) -> Result<Self> {
+    pub fn build(x: &FeatureData, cols: Vec<usize>) -> Result<Self> {
+        Self::build_with(x, cols, None, 1)
+    }
+
+    /// [`ReducedProblem::build`] with a parent [`FeatureCache`] to remap
+    /// (O(|cols|) instead of an O(nnz) rebuild) and a pool-parallel
+    /// column gather over `workers` threads.
+    pub fn build_with(
+        x: &FeatureData,
+        mut cols: Vec<usize>,
+        cache: Option<&FeatureCache>,
+        workers: usize,
+    ) -> Result<Self> {
         let m_full = x.n_features();
         cols.sort_unstable();
         cols.dedup();
         if cols.iter().any(|&j| j >= m_full) {
             return Err(Error::solver("kept column index out of range"));
         }
-        let sub = match x {
-            FeatureData::Dense(d) => FeatureData::Dense(d.select_cols(&cols)),
-            FeatureData::Sparse(s) => FeatureData::Sparse(s.select_cols(&cols)),
+        let sub = gather(x, &cols, workers);
+        let cache = cache.map(|c| c.select(&cols));
+        Ok(ReducedProblem { cols, m_full, x: sub, cache })
+    }
+
+    /// Incremental build: when `cols` is a subset of `prev.cols` (the
+    /// common case along a descending λ-grid where screening only
+    /// tightens), sub-select from the previous *reduced* matrix —
+    /// O(kept nnz) — instead of re-gathering from the full matrix.
+    /// Falls back to [`ReducedProblem::build_with`] otherwise. Returns
+    /// the problem plus whether the fast path was taken. Either way the
+    /// column bytes are identical, so downstream solves are bit-identical.
+    pub fn build_incremental(
+        prev: &ReducedProblem,
+        x: &FeatureData,
+        mut cols: Vec<usize>,
+        cache: Option<&FeatureCache>,
+        workers: usize,
+    ) -> Result<(Self, bool)> {
+        cols.sort_unstable();
+        cols.dedup();
+        // Map each wanted column to its position in prev.cols via a
+        // single merge walk (both lists ascending).
+        let mut local = Vec::with_capacity(cols.len());
+        let mut pi = 0usize;
+        let mut subset = prev.m_full == x.n_features();
+        if subset {
+            for &j in &cols {
+                while pi < prev.cols.len() && prev.cols[pi] < j {
+                    pi += 1;
+                }
+                if pi < prev.cols.len() && prev.cols[pi] == j {
+                    local.push(pi);
+                } else {
+                    subset = false;
+                    break;
+                }
+            }
+        }
+        if !subset {
+            return Ok((Self::build_with(x, cols, cache, workers)?, false));
+        }
+        let sub = gather(&prev.x, &local, workers);
+        // Remap the cache from the full one when given (always O(|cols|));
+        // otherwise chain from the previous reduction's cache.
+        let red_cache = match (cache, &prev.cache) {
+            (Some(full), _) => Some(full.select(&cols)),
+            (None, Some(pc)) => Some(pc.select(&local)),
+            (None, None) => None,
         };
-        Ok(ReducedProblem { cols, m_full, x: sub })
+        Ok((ReducedProblem { cols, m_full: prev.m_full, x: sub, cache: red_cache }, true))
+    }
+
+    /// Approximate bytes materialized by this problem's gather (CSC:
+    /// index + value per stored entry; dense: 8 bytes per cell). Feeds
+    /// the `path.gather_bytes` telemetry counter.
+    pub fn gathered_bytes(&self) -> u64 {
+        match &self.x {
+            FeatureData::Dense(d) => (d.n_samples() * d.n_features() * 8) as u64,
+            FeatureData::Sparse(s) => (s.nnz() * 12) as u64,
+        }
     }
 
     /// Restricts a full-length warm start to the kept columns.
@@ -41,7 +143,8 @@ impl ReducedProblem {
         self.cols.iter().map(|&j| w_full[j]).collect()
     }
 
-    /// Solves the reduced problem and scatters back to full length.
+    /// Solves the reduced problem and scatters back to full length. The
+    /// remapped cache (when present) supplies the CD curvature vector.
     pub fn solve(
         &self,
         kind: SolverKind,
@@ -51,7 +154,15 @@ impl ReducedProblem {
         opts: &SolveOptions,
     ) -> Result<SolveReport> {
         let w0 = w0_full.map(|w| self.restrict(w));
-        let mut rep = solve(kind, &self.x, y, lambda, w0.as_deref(), opts)?;
+        let mut rep = solve_with_curvature(
+            kind,
+            &self.x,
+            y,
+            lambda,
+            w0.as_deref(),
+            opts,
+            self.cache.as_ref().map(|c| c.norm_sq.as_slice()),
+        )?;
         rep.w = scatter_solution(self.m_full, &self.cols, &rep.w);
         Ok(rep)
     }
@@ -71,6 +182,7 @@ pub fn scatter_solution(m_full: usize, cols: &[usize], w_reduced: &[f64]) -> Vec
 mod tests {
     use super::*;
     use crate::data::synth::SynthSpec;
+    use crate::solver::api::solve;
     use crate::svm::problem::Problem;
     use crate::testkit::assert_close;
 

@@ -1,10 +1,12 @@
 //! The [`Problem`] container: a dataset bound to the sparse-SVM model,
 //! with the λ_max statistics cached.
 
+use crate::data::cache::FeatureCache;
 use crate::data::dataset::Dataset;
 use crate::data::{FeatureData, FeatureMatrix};
 use crate::svm::dual::DualPoint;
 use crate::svm::lambda_max::{lambda_max_stats, LambdaMaxStats};
+use std::sync::OnceLock;
 
 /// A sparse-SVM training problem: features, labels and the cached
 /// closed-form quantities of §4/§5 of the paper.
@@ -17,13 +19,23 @@ pub struct Problem {
     /// Dataset name (for reports).
     pub name: String,
     lm: LambdaMaxStats,
+    cache: OnceLock<FeatureCache>,
 }
 
 impl Problem {
     /// Binds a dataset (cheap clone of labels; features are moved).
     pub fn new(name: impl Into<String>, x: FeatureData, y: Vec<f64>) -> Self {
         let lm = lambda_max_stats(&x, &y);
-        Problem { x, y, name: name.into(), lm }
+        Problem { x, y, name: name.into(), lm, cache: OnceLock::new() }
+    }
+
+    /// The path-wide per-feature statistics cache
+    /// ([`crate::data::cache::FeatureCache`]): built lazily with one
+    /// O(nnz) pass on first use, then shared by screening sweeps, the
+    /// CD curvature vector and the block partitioner, and *remapped*
+    /// (never recomputed) onto each reduced problem.
+    pub fn cache(&self) -> &FeatureCache {
+        self.cache.get_or_init(|| FeatureCache::build(&self.x, &self.y))
     }
 
     /// Builds from a [`Dataset`] by cloning its storage.
@@ -86,6 +98,17 @@ mod tests {
         assert_eq!(p.n(), 40);
         assert_eq!(p.m(), 12);
         assert!(p.name.contains("synth-dense"));
+    }
+
+    #[test]
+    fn feature_cache_lazy_and_stable() {
+        let ds = SynthSpec::text(30, 60, 14).generate();
+        let p = Problem::from_dataset(&ds);
+        let c1 = p.cache();
+        assert_eq!(c1.len(), p.m());
+        assert_eq!(c1.nnz, p.x.nnz());
+        // Same instance on repeat calls (lazy init, not a rebuild).
+        assert!(std::ptr::eq(c1, p.cache()));
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Path-wide feature-cache guarantees: cached screening is bit-identical
+//! to the uncached `col_dot4` path, incremental reduced problems match
+//! from-scratch gathers byte-for-byte, and the reuse telemetry lands in
+//! the global registry.
+
+use svmscreen::coordinator::parallel::screen_all_parallel_with;
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::screening::rule::{screen_all, screen_all_with, RuleKind};
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+use svmscreen::solver::reduced::ReducedProblem;
+use svmscreen::svm::problem::Problem;
+
+const RULES: [RuleKind; 4] =
+    [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong];
+
+/// Cached stats (and the block-parallel executor at any worker count)
+/// must reproduce the uncached sequential sweep to the last bit — same
+/// keep decisions AND same bound values.
+#[test]
+fn cached_screening_bit_identical_to_uncached() {
+    let specs = [SynthSpec::dense(50, 80, 901), SynthSpec::text(70, 300, 902)];
+    for spec in specs {
+        let p = Problem::from_dataset(&spec.generate());
+        let lmax = p.lambda_max();
+        let cache = p.cache();
+
+        // Two dual points: the closed form at lambda_max and a solved
+        // mid-path point (the realistic warm-started case).
+        let rep = solve(
+            SolverKind::Cd,
+            &p.x,
+            &p.y,
+            0.5 * lmax,
+            None,
+            &SolveOptions { tol: 1e-7, ..Default::default() },
+        )
+        .unwrap();
+        let theta_mid =
+            svmscreen::svm::dual::theta_from_primal(&p.x, &p.y, &rep.w, rep.b, 0.5 * lmax);
+        let points = [(lmax, p.theta_at_lambda_max().theta()), (0.5 * lmax, theta_mid)];
+
+        for (lambda1, theta1) in &points {
+            let lambda1 = *lambda1;
+            for rule in RULES {
+                for frac in [0.9, 0.5, 0.2] {
+                    let lambda2 = frac * lambda1;
+                    let base =
+                        screen_all(rule, &p.x, &p.y, theta1, lambda1, lambda2).unwrap();
+                    let cached = screen_all_with(
+                        rule,
+                        &p.x,
+                        &p.y,
+                        theta1,
+                        lambda1,
+                        lambda2,
+                        Some(cache),
+                    )
+                    .unwrap();
+                    assert_eq!(base.keep, cached.keep, "{} keep {rule:?} {frac}", p.name);
+                    assert_eq!(
+                        base.bounds, cached.bounds,
+                        "{} bounds {rule:?} {frac}",
+                        p.name
+                    );
+                    for workers in [1, 4] {
+                        let par = screen_all_parallel_with(
+                            rule,
+                            &p.x,
+                            &p.y,
+                            theta1,
+                            lambda1,
+                            lambda2,
+                            workers,
+                            Some(cache),
+                        )
+                        .unwrap();
+                        assert_eq!(
+                            base.keep, par.keep,
+                            "{} parallel({workers}) keep {rule:?} {frac}",
+                            p.name
+                        );
+                        assert_eq!(
+                            base.bounds, par.bounds,
+                            "{} parallel({workers}) bounds {rule:?} {frac}",
+                            p.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sub-selecting from the previous reduced matrix must produce the same
+/// columns, the same bytes, and the same solve as a from-scratch gather.
+#[test]
+fn incremental_reduction_matches_scratch() {
+    let p = Problem::from_dataset(&SynthSpec::text(100, 200, 903).generate());
+    let cache = p.cache();
+    let lambda = 0.3 * p.lambda_max();
+    let opts = SolveOptions { tol: 1e-7, ..Default::default() };
+
+    let s1: Vec<usize> = (0..200).step_by(2).collect();
+    let r1 = ReducedProblem::build_with(&p.x, s1, Some(cache), 2).unwrap();
+
+    // Subset of the previous kept set: must reuse.
+    let s2: Vec<usize> = (0..200).step_by(4).collect();
+    let (r2, reused) =
+        ReducedProblem::build_incremental(&r1, &p.x, s2.clone(), Some(cache), 2).unwrap();
+    assert!(reused, "subset kept set must take the incremental path");
+    let scratch = ReducedProblem::build_with(&p.x, s2, Some(cache), 1).unwrap();
+    assert_eq!(r2.cols, scratch.cols);
+    assert_eq!(r2.x, scratch.x, "sub-selected matrix must be byte-identical");
+    assert_eq!(r2.cache, scratch.cache, "remapped cache must match");
+    let a = r2.solve(SolverKind::Cd, &p.y, lambda, None, &opts).unwrap();
+    let b = scratch.solve(SolverKind::Cd, &p.y, lambda, None, &opts).unwrap();
+    assert_eq!(a.w, b.w, "identical inputs must give identical solutions");
+    assert_eq!(a.b, b.b);
+
+    // Not a subset (col 1 was never in r1): falls back to a full gather.
+    let s3 = vec![1usize, 4, 8];
+    let (r3, reused3) =
+        ReducedProblem::build_incremental(&r1, &p.x, s3.clone(), Some(cache), 2).unwrap();
+    assert!(!reused3, "non-subset must fall back to a full gather");
+    let scratch3 = ReducedProblem::build_with(&p.x, s3, Some(cache), 1).unwrap();
+    assert_eq!(r3.cols, scratch3.cols);
+    assert_eq!(r3.x, scratch3.x);
+}
+
+/// The full path with incremental reuse enabled is exactly the path with
+/// it disabled: same kept sets, same weights, same biases, bit for bit.
+#[test]
+fn incremental_path_identical_to_scratch_path() {
+    let p = Problem::from_dataset(&SynthSpec::text(80, 300, 905).generate());
+    let grid = geometric(p.lambda_max(), 0.05, 10);
+    let inc = run_path(
+        &p,
+        &grid,
+        &PathConfig { incremental: true, workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let scr = run_path(
+        &p,
+        &grid,
+        &PathConfig { incremental: false, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(inc.steps.len(), scr.steps.len());
+    for k in 0..grid.len() {
+        assert_eq!(inc.steps[k].kept, scr.steps[k].kept, "kept set size step {k}");
+        assert_eq!(inc.weights[k], scr.weights[k], "weights step {k}");
+        assert_eq!(inc.biases[k], scr.biases[k], "bias step {k}");
+    }
+}
+
+/// The parallel executor must feed the same telemetry stream as the
+/// sequential sweep (`screening.<rule>.sweeps` et al.).
+#[test]
+fn parallel_screen_records_sweep_telemetry() {
+    let p = Problem::from_dataset(&SynthSpec::dense(40, 60, 907).generate());
+    let lmax = p.lambda_max();
+    let theta = p.theta_at_lambda_max().theta();
+    let sweeps = svmscreen::telemetry::global().counter("screening.sphere.sweeps");
+    let before = sweeps.get();
+    screen_all_parallel_with(
+        RuleKind::Sphere,
+        &p.x,
+        &p.y,
+        &theta,
+        lmax,
+        0.5 * lmax,
+        2,
+        Some(p.cache()),
+    )
+    .unwrap();
+    assert!(sweeps.get() >= before + 1, "parallel sweep must be counted");
+}
+
+/// A path run registers the cache-reuse metrics and exercises at least
+/// one reduced gather.
+#[test]
+fn path_run_registers_cache_metrics() {
+    let p = Problem::from_dataset(&SynthSpec::text(60, 250, 909).generate());
+    let grid = geometric(p.lambda_max(), 0.1, 6);
+    run_path(&p, &grid, &PathConfig::default()).unwrap();
+    let snap = svmscreen::telemetry::global().snapshot();
+    for key in ["path.cache.hits", "path.cache.misses", "path.gather_bytes"] {
+        assert!(snap.counters.contains_key(key), "missing counter {key}");
+    }
+    assert!(
+        snap.histograms.contains_key("path.step.gather_seconds"),
+        "missing gather histogram"
+    );
+    let hits = snap.counters["path.cache.hits"];
+    let misses = snap.counters["path.cache.misses"];
+    assert!(hits + misses >= 1, "path must build at least one reduced problem");
+    assert!(snap.counters["path.gather_bytes"] > 0, "gathered bytes must be metered");
+}
