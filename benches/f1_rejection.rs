@@ -11,6 +11,10 @@ use svmscreen::report::table::Table;
 
 fn main() {
     common::banner("F1", "rejection ratio along the regularization path");
+    // Arm the provenance ledger: CI exports the near-miss verdicts as
+    // an artifact (f1_ledger.jsonl) and summarizes them per rule.
+    let ledger = svmscreen::diag::ledger::global();
+    ledger.set_enabled(true);
     let bench_t0 = std::time::Instant::now();
     let mut csv: Vec<Vec<String>> = Vec::new();
     let mut paper_rej: Vec<f64> = Vec::new();
@@ -58,6 +62,22 @@ fn main() {
         &["dataset", "lambda_frac", "paper", "ball", "sphere"],
         &csv,
     );
+    // Ledger export + per-rule near-miss counts for the CI step summary.
+    let summary = ledger.summary();
+    println!(
+        "[ledger] {} verdict(s) recorded, {} near-miss(es) (eps {:.1e})",
+        summary.recorded, summary.near_misses, summary.near_miss_eps
+    );
+    let near_misses = ledger.near_misses();
+    match svmscreen::report::diag::write_jsonl("f1_ledger.jsonl", &near_misses) {
+        Ok(()) => println!("[ledger] f1_ledger.jsonl ({} near-miss verdicts)", near_misses.len()),
+        Err(e) => eprintln!("[ledger] export not written: {e}"),
+    }
+    let counters = svmscreen::telemetry::global().snapshot().counters;
+    let near = |rule: &str| {
+        *counters.get(&format!("screening.{rule}.near_miss")).unwrap_or(&0) as f64
+    };
+    use svmscreen::coordinator::protocol::Json;
     common::emit_artifact(
         svmscreen::report::bench::BenchArtifact::new(
             "f1",
@@ -65,9 +85,10 @@ fn main() {
         )
         .wall_seconds(bench_t0.elapsed().as_secs_f64())
         .mean_rejection(paper_rej.iter().sum::<f64>() / paper_rej.len().max(1) as f64)
-        .extra(
-            "csv_rows",
-            svmscreen::coordinator::protocol::Json::Num(csv.len() as f64),
-        ),
+        .extra("csv_rows", Json::Num(csv.len() as f64))
+        .extra("near_miss_paper", Json::Num(near("paper")))
+        .extra("near_miss_ball", Json::Num(near("ball")))
+        .extra("near_miss_sphere", Json::Num(near("sphere")))
+        .extra("ledger_dropped", Json::Num(summary.dropped as f64)),
     );
 }

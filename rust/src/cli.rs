@@ -19,7 +19,7 @@ pub struct Cli {
 }
 
 /// Flags that take no value (presence ⇒ `true`).
-const SWITCHES: &[&str] = &["verbose", "indices", "no-normalize", "csv", "audit"];
+const SWITCHES: &[&str] = &["verbose", "indices", "no-normalize", "csv", "audit", "ledger"];
 
 /// Parses an argument vector (without argv[0]).
 pub fn parse_args(args: &[String]) -> Result<Cli> {
@@ -74,7 +74,12 @@ COMMANDS:
   path      regularization path with sequential screening
             --data ... [--steps 30] [--min-frac 0.05] [--rule ...]
             [--solver ...] [--tol ...] [--workers N] [--csv FILE]
-            [--trace-out FILE] [--audit]
+            [--trace-out FILE] [--audit] [--ledger]
+  explain   run a path with the provenance ledger armed, then explain
+            screening decisions: per-rule near-miss breakdown, top-N
+            closest calls, optional single-feature history
+            --data ... [--steps ...] [--rule ...] [--feature J] [--top N]
+            [--near-miss-eps 1e-2] [--export FILE(.jsonl|.csv)]
   serve     start the screening service
             --data ... [--addr 127.0.0.1:7878] [--workers N]
   help      this text
@@ -89,6 +94,16 @@ FLAGS:
                     re-check every screened-out feature against the KKT
                     condition; violations are counted in
                     screening.violations and logged as errors
+  --ledger          arm the screening provenance ledger for this run:
+                    every per-feature verdict (rule, bound, margin) is
+                    recorded and summarized after the run
+  --feature J       explain: print the full verdict history of feature J
+  --top N           explain: print the N closest near-miss verdicts
+                    (default 10)
+  --near-miss-eps E flag features whose |margin| to the keep/reject
+                    threshold is below E (default 1e-2)
+  --export FILE     explain: dump every recorded verdict; .csv extension
+                    writes CSV, anything else JSONL
 
 ENVIRONMENT:
   PALLAS_LOG              stderr log level: error|warn|info|debug|trace|off
@@ -99,6 +114,13 @@ ENVIRONMENT:
   PALLAS_TRACE_OUT        like --trace-out, honored by benches and any run
   PALLAS_STATS_DUMP_SECS  serve: emit a full stats snapshot through the
                           sinks every N seconds (fractional ok)
+  PALLAS_LEDGER           1/true/yes/on: arm the provenance ledger for any
+                          run (equivalent to --ledger, honored by benches)
+  PALLAS_LEDGER_CAPACITY  max buffered verdicts before eviction
+                          (default 65536)
+  PALLAS_NEAR_MISS_EPS    near-miss threshold (default 1e-2)
+
+See docs/OBSERVABILITY.md for the full observability tour.
 ";
 
 #[cfg(test)]

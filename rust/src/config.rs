@@ -108,6 +108,12 @@ pub struct RunConfig {
     pub trace_out: Option<String>,
     /// Safety-audit mode: re-check screened features at convergence.
     pub audit: bool,
+    /// Provenance-ledger mode: record per-feature screening verdicts
+    /// into [`crate::diag::ledger`] (implied by the `explain` command).
+    pub ledger: bool,
+    /// Near-miss threshold: a feature whose screening margin lands
+    /// within this epsilon of the keep/reject boundary is flagged.
+    pub near_miss_eps: f64,
 }
 
 impl RunConfig {
@@ -137,6 +143,9 @@ impl RunConfig {
             addr: raw.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
             trace_out: raw.get("trace-out").map(str::to_string),
             audit: raw.get_bool("audit", false)?,
+            ledger: raw.get_bool("ledger", false)?,
+            near_miss_eps: raw
+                .get_f64("near-miss-eps", crate::diag::ledger::DEFAULT_NEAR_MISS_EPS)?,
         })
     }
 
@@ -153,6 +162,7 @@ impl RunConfig {
             solve: self.solve_options(),
             audit: self.audit,
             workers: self.workers,
+            near_miss_eps: self.near_miss_eps,
             ..Default::default()
         }
     }
@@ -235,6 +245,19 @@ mod tests {
         assert_eq!(cfg.trace_out, None);
         assert!(!cfg.audit);
         assert!(!cfg.path_config().audit);
+        assert!(!cfg.ledger);
+        assert_eq!(cfg.near_miss_eps, crate::diag::ledger::DEFAULT_NEAR_MISS_EPS);
+    }
+
+    #[test]
+    fn ledger_flags_resolve() {
+        let mut raw = RawConfig::default();
+        raw.set("ledger", "true");
+        raw.set("near-miss-eps", "1e-4");
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert!(cfg.ledger);
+        assert_eq!(cfg.near_miss_eps, 1e-4);
+        assert_eq!(cfg.path_config().near_miss_eps, 1e-4);
     }
 
     #[test]

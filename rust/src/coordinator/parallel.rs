@@ -94,7 +94,7 @@ pub fn screen_all_parallel_with<X: FeatureMatrix + Sync>(
     // Same sweep-amortization semantics as screen_all: one report = one
     // O(nnz) data pass. (Parallel sweeps were previously invisible to
     // the screening.* counters/histograms.)
-    record_screen_telemetry(&report, 1);
+    record_screen_telemetry(&report, 1, "par");
     Ok(report)
 }
 

@@ -19,8 +19,13 @@
 //! | `{"cmd":"screen","lambda2":x,"indices":true}` | … plus kept indices |
 //! | `{"cmd":"stats"}` | live telemetry snapshot: request counters, latency percentiles, batching stats, per-λ screening efficacy |
 //! | `{"cmd":"stats","prometheus":true}` | … plus a Prometheus text rendering under `"prometheus"` |
-//! | `{"cmd":"trace"}` | drains the trace ring: buffered span/instant records as JSON (plus `dropped` count) |
+//! | `{"cmd":"trace"}` | drains the trace ring: buffered span/instant records as JSON (plus `dropped` since last drain and cumulative `dropped_total`) |
 //! | `{"cmd":"trace","chrome":true}` | … records wrapped as a Chrome trace-event document under `"chrome"` |
+//! | `{"cmd":"diag"}` | provenance-ledger summary: recorded/dropped/buffered verdicts, near-miss counts per rule |
+//! | `{"cmd":"diag","enable":true}` | toggles the global ledger on/off before summarizing |
+//! | `{"cmd":"diag","feature":17}` | … plus the full verdict history of feature 17 under `"feature_history"` |
+//! | `{"cmd":"diag","top":5}` | … plus the 5 closest near-miss verdicts under `"near_misses"` |
+//! | `{"cmd":"diag","solver":true}` | … plus recent convergence summaries (gap traces, stalls, anomalies) under `"solves"` |
 //! | `{"cmd":"quit"}` | closes the connection |
 //!
 //! Every response carries `"ok"`; errors come back as
@@ -502,6 +507,7 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
                 ("ok", Json::Bool(true)),
                 ("count", Json::Num(records.len() as f64)),
                 ("dropped", Json::Num(dropped as f64)),
+                ("dropped_total", Json::Num(ring.dropped_total() as f64)),
             ];
             if matches!(req.get("chrome"), Some(Json::Bool(true))) {
                 fields.push(("chrome", crate::telemetry::trace::chrome_trace(&records)));
@@ -509,6 +515,39 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
                 fields.push((
                     "records",
                     Json::Arr(records.iter().map(|r| r.to_json()).collect()),
+                ));
+            }
+            Json::obj(fields)
+        }
+        "diag" => {
+            let ledger = crate::diag::ledger::global();
+            if let Some(Json::Bool(b)) = req.get("enable") {
+                ledger.set_enabled(*b);
+            }
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("ledger", ledger.summary().to_json()),
+            ];
+            if let Some(j) = req.get("feature").and_then(|v| v.as_f64()) {
+                let history = ledger.feature_history(j as usize);
+                fields.push((
+                    "feature_history",
+                    Json::Arr(history.iter().map(|v| v.to_json()).collect()),
+                ));
+            }
+            if let Some(n) = req.get("top").and_then(|v| v.as_f64()) {
+                let top = ledger.top_near_misses(n.max(0.0) as usize);
+                fields.push((
+                    "near_misses",
+                    Json::Arr(top.iter().map(|v| v.to_json()).collect()),
+                ));
+            }
+            if matches!(req.get("solver"), Some(Json::Bool(true))) {
+                let log = crate::diag::convergence::log_snapshot();
+                let tail = log.len().saturating_sub(16);
+                fields.push((
+                    "solves",
+                    Json::Arr(log[tail..].iter().map(|s| s.to_json()).collect()),
                 ));
             }
             Json::obj(fields)
@@ -733,6 +772,96 @@ mod tests {
         assert!(chrome.get("records").is_none());
         let doc = chrome.get("chrome").unwrap();
         assert!(doc.get("traceEvents").unwrap().as_arr().is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn diag_command_toggles_ledger_and_answers_queries() {
+        let server = start_test_server();
+        let mut c = Client::connect(server.addr).unwrap();
+        // Enable the global ledger over the wire, screen once, then ask
+        // for provenance. The ledger is process-global, so assertions
+        // are tolerant of concurrent recorders in other tests.
+        let diag = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("diag".into())),
+                ("enable", Json::Bool(true)),
+            ]))
+            .unwrap();
+        assert_eq!(diag.get("ok"), Some(&Json::Bool(true)), "{diag:?}");
+        let ledger = diag.get("ledger").unwrap();
+        assert_eq!(ledger.get("enabled"), Some(&Json::Bool(true)));
+        let info = c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.7 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        let diag = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("diag".into())),
+                ("feature", Json::Num(0.0)),
+                ("top", Json::Num(3.0)),
+                ("solver", Json::Bool(true)),
+            ]))
+            .unwrap();
+        assert_eq!(diag.get("ok"), Some(&Json::Bool(true)), "{diag:?}");
+        let summary = diag.get("ledger").unwrap();
+        assert!(summary.get("recorded").unwrap().as_f64().unwrap() >= 120.0);
+        let history = diag.get("feature_history").unwrap().as_arr().unwrap();
+        assert!(!history.is_empty(), "feature 0 should have a verdict");
+        assert_eq!(history[0].get("feature").unwrap().as_f64(), Some(0.0));
+        let top = diag.get("near_misses").unwrap().as_arr().unwrap();
+        assert!(top.len() <= 3);
+        assert!(diag.get("solves").unwrap().as_arr().is_some());
+        // Disable again so other tests see the default-off ledger.
+        let diag = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("diag".into())),
+                ("enable", Json::Bool(false)),
+            ]))
+            .unwrap();
+        assert_eq!(
+            diag.get("ledger").unwrap().get("enabled"),
+            Some(&Json::Bool(false))
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_command_guards_nan_gauges_and_empty_histograms() {
+        let server = start_test_server();
+        // Poison the global registry the way a buggy producer would:
+        // a NaN gauge and a histogram nobody ever recorded into.
+        telemetry::global().gauge("server.test.nan_gauge").set(f64::NAN);
+        let _ = telemetry::global().histogram("server.test.empty_hist");
+        let mut c = Client::connect(server.addr).unwrap();
+        let stats = c.request(&Json::obj(vec![
+            ("cmd", Json::Str("stats".into())),
+            ("prometheus", Json::Bool(true)),
+        ]));
+        let stats = stats.unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)), "{stats:?}");
+        let metrics = stats.get("metrics").unwrap();
+        // Non-finite gauges must encode as null, never as bare NaN
+        // (which would corrupt the JSON line protocol).
+        assert_eq!(
+            metrics.get("gauges").unwrap().get("server.test.nan_gauge"),
+            Some(&Json::Null)
+        );
+        let hist = metrics
+            .get("histograms")
+            .unwrap()
+            .get("server.test.empty_hist")
+            .unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(0.0));
+        // The Prometheus rendering must survive both edge cases too.
+        let text = stats.get("prometheus").unwrap().as_str().unwrap();
+        assert!(text.contains("server_test_nan_gauge"), "{text}");
+        assert!(text.contains("server_test_empty_hist"), "{text}");
         server.shutdown();
     }
 

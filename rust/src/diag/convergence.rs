@@ -1,0 +1,282 @@
+//! The solver convergence recorder: per-gap-check traces for CD and
+//! FISTA with stall / divergence / non-finite detection.
+//!
+//! A [`Monitor`] is created per solve and observed at every duality-gap
+//! check (the solvers already pay O(nnz) there, so observation is
+//! noise). Anomalies increment `solver.anomalies` (and the per-solver
+//! `solver.<kind>.anomalies`) and emit a `solver.anomaly` warn event —
+//! warn-level events are mirrored into the trace ring as instants, so
+//! a stalled solve is visible in the exported Chrome trace. When the
+//! solve finishes, [`Monitor::finish`] archives a
+//! [`ConvergenceSummary`] (bounded gap trace included) into a global
+//! bounded log queryable via [`log_snapshot`], the `pallas explain`
+//! subcommand and `{"cmd":"diag","solver":true}`.
+
+use crate::coordinator::protocol::Json;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+/// Gap checks without meaningful improvement before a stall fires.
+pub const DEFAULT_STALL_WINDOW: usize = 8;
+
+/// A gap this many times the best-seen gap counts as divergence.
+pub const DEFAULT_DIVERGENCE_FACTOR: f64 = 10.0;
+
+/// Relative improvement below which a gap check counts as "no
+/// progress" for stall detection.
+const REL_IMPROVEMENT: f64 = 1e-3;
+
+/// Max `(iteration, rel_gap)` points kept per solve.
+const MAX_TRACE: usize = 512;
+
+/// Max archived [`ConvergenceSummary`] entries in the global log.
+const LOG_CAPACITY: usize = 256;
+
+/// Archived outcome of one monitored solve.
+#[derive(Debug, Clone)]
+pub struct ConvergenceSummary {
+    /// Solver name (`"cd"` / `"fista"`).
+    pub solver: &'static str,
+    /// The solve's λ.
+    pub lambda: f64,
+    /// Iterations/epochs run.
+    pub iterations: usize,
+    /// Whether the solver reported convergence.
+    pub converged: bool,
+    /// Final relative duality gap.
+    pub rel_gap: f64,
+    /// Gap checks observed.
+    pub checks: usize,
+    /// Total anomalies (stalls + divergences + non-finite gaps).
+    pub anomalies: usize,
+    /// Stall anomalies.
+    pub stalls: usize,
+    /// Divergence anomalies.
+    pub divergences: usize,
+    /// The `(iteration, rel_gap)` trace (capped at [`MAX_TRACE`]).
+    pub trace: Vec<(usize, f64)>,
+}
+
+impl ConvergenceSummary {
+    /// Protocol-JSON view (non-finite numbers become `null`).
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let trace = Json::Arr(
+            self.trace
+                .iter()
+                .map(|&(it, g)| Json::Arr(vec![Json::Num(it as f64), num(g)]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("solver", Json::Str(self.solver.into())),
+            ("lambda", num(self.lambda)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("rel_gap", num(self.rel_gap)),
+            ("checks", Json::Num(self.checks as f64)),
+            ("anomalies", Json::Num(self.anomalies as f64)),
+            ("stalls", Json::Num(self.stalls as f64)),
+            ("divergences", Json::Num(self.divergences as f64)),
+            ("trace", trace),
+        ])
+    }
+}
+
+/// Per-solve convergence monitor. Cheap enough to be always on: it
+/// only does work at gap checks, which already cost a full data pass.
+#[derive(Debug)]
+pub struct Monitor {
+    solver: &'static str,
+    lambda: f64,
+    stall_window: usize,
+    divergence_factor: f64,
+    best_gap: f64,
+    since_improvement: usize,
+    checks: usize,
+    anomalies: usize,
+    stalls: usize,
+    divergences: usize,
+    trace: Vec<(usize, f64)>,
+}
+
+impl Monitor {
+    /// Creates a monitor with the default stall/divergence thresholds.
+    pub fn new(solver: &'static str, lambda: f64) -> Self {
+        Monitor {
+            solver,
+            lambda,
+            stall_window: DEFAULT_STALL_WINDOW,
+            divergence_factor: DEFAULT_DIVERGENCE_FACTOR,
+            best_gap: f64::INFINITY,
+            since_improvement: 0,
+            checks: 0,
+            anomalies: 0,
+            stalls: 0,
+            divergences: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Overrides the stall window (gap checks without improvement).
+    pub fn with_stall_window(mut self, window: usize) -> Self {
+        self.stall_window = window.max(1);
+        self
+    }
+
+    /// Anomalies detected so far.
+    pub fn anomalies(&self) -> usize {
+        self.anomalies
+    }
+
+    /// Observes one duality-gap check.
+    pub fn observe(&mut self, iteration: usize, rel_gap: f64) {
+        self.checks += 1;
+        if self.trace.len() < MAX_TRACE {
+            self.trace.push((iteration, rel_gap));
+        }
+        if !rel_gap.is_finite() {
+            self.anomaly("non-finite gap", iteration, rel_gap);
+            return;
+        }
+        if rel_gap > self.divergence_factor * self.best_gap {
+            self.divergences += 1;
+            self.anomaly("divergence", iteration, rel_gap);
+            // Re-baseline so a persistent plateau at the higher level
+            // doesn't re-fire on every subsequent check.
+            self.best_gap = rel_gap;
+            self.since_improvement = 0;
+            return;
+        }
+        if rel_gap < self.best_gap * (1.0 - REL_IMPROVEMENT) {
+            self.best_gap = rel_gap;
+            self.since_improvement = 0;
+            return;
+        }
+        self.best_gap = self.best_gap.min(rel_gap);
+        self.since_improvement += 1;
+        if self.since_improvement >= self.stall_window {
+            self.stalls += 1;
+            self.anomaly("stall", iteration, rel_gap);
+            self.since_improvement = 0;
+        }
+    }
+
+    fn anomaly(&mut self, kind: &str, iteration: usize, rel_gap: f64) {
+        self.anomalies += 1;
+        let tele = crate::telemetry::global();
+        tele.counter("solver.anomalies").inc();
+        tele.counter(&format!("solver.{}.anomalies", self.solver)).inc();
+        crate::tele_warn!(
+            "solver.anomaly",
+            "{} {} at iter {} (lambda {:.4e}, rel_gap {:.3e}, best {:.3e})",
+            self.solver,
+            kind,
+            iteration,
+            self.lambda,
+            rel_gap,
+            self.best_gap
+        );
+    }
+
+    /// Seals the monitor: archives a [`ConvergenceSummary`] into the
+    /// global log and returns the anomaly count (what lands in
+    /// `SolveReport::anomalies`).
+    pub fn finish(self, iterations: usize, converged: bool, rel_gap: f64) -> usize {
+        let anomalies = self.anomalies;
+        let summary = ConvergenceSummary {
+            solver: self.solver,
+            lambda: self.lambda,
+            iterations,
+            converged,
+            rel_gap,
+            checks: self.checks,
+            anomalies,
+            stalls: self.stalls,
+            divergences: self.divergences,
+            trace: self.trace,
+        };
+        let mut log = log().lock().unwrap();
+        if log.len() >= LOG_CAPACITY {
+            log.pop_front();
+        }
+        log.push_back(summary);
+        anomalies
+    }
+}
+
+fn log() -> &'static Mutex<VecDeque<ConvergenceSummary>> {
+    static LOG: OnceLock<Mutex<VecDeque<ConvergenceSummary>>> = OnceLock::new();
+    LOG.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// The archived summaries, oldest first (bounded at [`LOG_CAPACITY`]).
+pub fn log_snapshot() -> Vec<ConvergenceSummary> {
+    log().lock().unwrap().iter().cloned().collect()
+}
+
+/// Clears the archive (test isolation helper).
+pub fn clear_log() {
+    log().lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_progress_is_clean() {
+        let mut m = Monitor::new("cd", 0.5);
+        let mut gap = 1.0;
+        for it in 1..=20 {
+            m.observe(it, gap);
+            gap *= 0.5;
+        }
+        assert_eq!(m.anomalies(), 0);
+        assert_eq!(m.finish(20, true, gap), 0);
+    }
+
+    #[test]
+    fn plateau_fires_stall_every_window() {
+        let mut m = Monitor::new("cd", 0.5).with_stall_window(4);
+        m.observe(1, 1e-3);
+        for it in 2..=9 {
+            m.observe(it, 1e-3); // 8 flat checks = 2 windows
+        }
+        assert_eq!(m.anomalies(), 2);
+    }
+
+    #[test]
+    fn divergence_fires_once_then_rebaselines() {
+        let mut m = Monitor::new("fista", 0.5);
+        m.observe(1, 1e-4);
+        m.observe(2, 5e-3); // 50x jump
+        assert_eq!(m.anomalies(), 1);
+        m.observe(3, 5e-3); // plateau at the new level: no re-fire
+        assert_eq!(m.anomalies(), 1);
+    }
+
+    #[test]
+    fn non_finite_gap_is_an_anomaly() {
+        let mut m = Monitor::new("cd", 0.5);
+        m.observe(1, f64::NAN);
+        assert_eq!(m.anomalies(), 1);
+    }
+
+    #[test]
+    fn finish_archives_summary_with_trace() {
+        // Lib tests share the global log across threads, so find our
+        // entry by its unique lambda instead of asserting on `last()`.
+        let mut m = Monitor::new("fista", 0.252_518);
+        m.observe(10, 1e-2);
+        m.observe(20, 1e-4);
+        let n = m.finish(20, true, 1e-4);
+        assert_eq!(n, 0);
+        let log = log_snapshot();
+        let mine = log.iter().find(|s| s.lambda == 0.252_518).unwrap();
+        assert_eq!(mine.solver, "fista");
+        assert_eq!(mine.trace, vec![(10, 1e-2), (20, 1e-4)]);
+        assert!(mine.converged);
+        let enc = mine.to_json().encode();
+        assert!(enc.contains("\"solver\":\"fista\""), "{enc}");
+    }
+}

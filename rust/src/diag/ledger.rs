@@ -1,0 +1,570 @@
+//! The screening provenance ledger: one [`Verdict`] per feature per
+//! sweep, answering "which rule screened feature j at λ, and by what
+//! margin?".
+//!
+//! The ledger is **observational**: it reads finished
+//! [`ScreenReport`]s after the keep/bounds vectors are sealed, so
+//! screening results are bit-identical whether it is enabled or not
+//! (asserted in `rust/tests/diag.rs`). It is disabled by default
+//! because a path run over a wide feature matrix produces one verdict
+//! per feature per step; when enabled, records land in a bounded
+//! lock-sharded ring (shard = `feature % SHARDS`, so one feature's
+//! history lives in one shard) and the oldest records are evicted —
+//! and counted — when a shard fills.
+//!
+//! Enabled or not is independent of the *aggregate* screening
+//! telemetry in [`crate::screening::rule`], which is always on. When
+//! the ledger is enabled it additionally feeds:
+//!
+//! * `screening.margin.kept` / `screening.margin.rejected` histograms
+//!   ([`BucketSpec::MARGINS`] buckets over `|margin|`) — bound
+//!   tightness at a glance,
+//! * `screening.near_miss` and `screening.<rule>.near_miss` counters —
+//!   features whose bound landed within ε of the keep threshold,
+//! * `diag.ledger.recorded` / `diag.ledger.dropped` counters.
+//!
+//! [`ScreenReport`]: crate::screening::rule::ScreenReport
+
+use crate::coordinator::protocol::Json;
+use crate::screening::rule::{ScreenReport, KEEP_THRESHOLD};
+use crate::screening::variants::AuditReport;
+use crate::telemetry::BucketSpec;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Number of lock shards (records shard by `feature % SHARDS`).
+pub const SHARDS: usize = 16;
+
+/// Default total capacity (verdicts) across all shards.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Default near-miss epsilon: a feature is a near-miss when its bound
+/// lands within this distance of [`KEEP_THRESHOLD`] (either side).
+pub const DEFAULT_NEAR_MISS_EPS: f64 = 1e-2;
+
+/// One per-feature screening decision with full provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    /// Feature index.
+    pub feature: usize,
+    /// Rule that produced the decision (`RuleKind::name`).
+    pub rule: &'static str,
+    /// Source λ (where the dual point was solved).
+    pub lambda1: f64,
+    /// Target λ (where the feature was screened).
+    pub lambda2: f64,
+    /// The rule's bound/score for this feature.
+    pub bound: f64,
+    /// The keep threshold the bound was compared against.
+    pub threshold: f64,
+    /// Normalized margin `bound − threshold` (&gt; 0 ⇔ kept; `+∞` for
+    /// unconditional keeps, e.g. the `none` rule).
+    pub margin: f64,
+    /// Whether the feature survived screening.
+    pub kept: bool,
+    /// Whether `|margin|` fell below the configured epsilon.
+    pub near_miss: bool,
+    /// Which sweep path recorded it: `"seq"`, `"batch"`, `"par"` or
+    /// `"audit"`.
+    pub source: &'static str,
+    /// Monotone sweep sequence number (one per recorded report).
+    pub sweep: u64,
+}
+
+impl Verdict {
+    /// CSV header matching [`Verdict::csv_row`].
+    pub const CSV_HEADER: [&'static str; 11] = [
+        "sweep", "feature", "rule", "source", "lambda1", "lambda2", "bound", "threshold",
+        "margin", "kept", "near_miss",
+    ];
+
+    /// One CSV row (same column order as [`Verdict::CSV_HEADER`]).
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.sweep.to_string(),
+            self.feature.to_string(),
+            self.rule.to_string(),
+            self.source.to_string(),
+            format!("{:.6e}", self.lambda1),
+            format!("{:.6e}", self.lambda2),
+            format!("{:.6e}", self.bound),
+            format!("{:.6e}", self.threshold),
+            format!("{:.6e}", self.margin),
+            self.kept.to_string(),
+            self.near_miss.to_string(),
+        ]
+    }
+
+    /// Protocol-JSON view (non-finite numbers become `null`).
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("sweep", Json::Num(self.sweep as f64)),
+            ("feature", Json::Num(self.feature as f64)),
+            ("rule", Json::Str(self.rule.into())),
+            ("source", Json::Str(self.source.into())),
+            ("lambda1", num(self.lambda1)),
+            ("lambda2", num(self.lambda2)),
+            ("bound", num(self.bound)),
+            ("threshold", num(self.threshold)),
+            ("margin", num(self.margin)),
+            ("kept", Json::Bool(self.kept)),
+            ("near_miss", Json::Bool(self.near_miss)),
+        ])
+    }
+}
+
+/// Counts how many bounds land within `eps` of [`KEEP_THRESHOLD`] —
+/// the per-step near-miss summary the path runner reports even when
+/// the ledger itself is disabled.
+pub fn near_miss_count(bounds: &[f64], eps: f64) -> usize {
+    bounds
+        .iter()
+        .filter(|b| {
+            let margin = **b - KEEP_THRESHOLD;
+            margin.is_finite() && margin.abs() < eps
+        })
+        .count()
+}
+
+/// Aggregate view of the ledger (the `{"cmd":"diag"}` payload).
+#[derive(Debug, Clone)]
+pub struct LedgerSummary {
+    /// Whether recording is currently enabled.
+    pub enabled: bool,
+    /// The configured near-miss epsilon.
+    pub near_miss_eps: f64,
+    /// Verdicts recorded since process start (monotone).
+    pub recorded: u64,
+    /// Verdicts evicted because a shard filled (monotone).
+    pub dropped: u64,
+    /// Verdicts currently buffered across all shards.
+    pub buffered: usize,
+    /// Buffered near-miss verdicts.
+    pub near_misses: usize,
+    /// Per-rule `(kept, rejected, near_miss)` breakdown of the buffer.
+    pub by_rule: Vec<(&'static str, usize, usize, usize)>,
+}
+
+impl LedgerSummary {
+    /// Protocol-JSON view.
+    pub fn to_json(&self) -> Json {
+        let by_rule = Json::Obj(
+            self.by_rule
+                .iter()
+                .map(|&(rule, kept, rejected, near)| {
+                    (
+                        rule.to_string(),
+                        Json::obj(vec![
+                            ("kept", Json::Num(kept as f64)),
+                            ("rejected", Json::Num(rejected as f64)),
+                            ("near_miss", Json::Num(near as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("near_miss_eps", Json::Num(self.near_miss_eps)),
+            ("recorded", Json::Num(self.recorded as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("buffered", Json::Num(self.buffered as f64)),
+            ("near_misses", Json::Num(self.near_misses as f64)),
+            ("by_rule", by_rule),
+        ])
+    }
+}
+
+/// The bounded, lock-sharded provenance ledger.
+#[derive(Debug)]
+pub struct Ledger {
+    capacity_per_shard: usize,
+    enabled: AtomicBool,
+    eps_bits: AtomicU64,
+    sweep_seq: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    shards: Vec<Mutex<VecDeque<Verdict>>>,
+}
+
+impl Ledger {
+    /// Creates a ledger holding at most `capacity` verdicts total,
+    /// recording disabled.
+    pub fn new(capacity: usize) -> Self {
+        Ledger {
+            capacity_per_shard: capacity.div_ceil(SHARDS).max(1),
+            enabled: AtomicBool::new(false),
+            eps_bits: AtomicU64::new(DEFAULT_NEAR_MISS_EPS.to_bits()),
+            sweep_seq: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+        }
+    }
+
+    /// Turns recording on/off.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether recording is on.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The configured near-miss epsilon.
+    pub fn near_miss_eps(&self) -> f64 {
+        f64::from_bits(self.eps_bits.load(Ordering::Relaxed))
+    }
+
+    /// Sets the near-miss epsilon (non-finite/negative values ignored).
+    pub fn set_near_miss_eps(&self, eps: f64) {
+        if eps.is_finite() && eps >= 0.0 {
+            self.eps_bits.store(eps.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Records every per-feature verdict of a finished sweep. No-op
+    /// (one relaxed load) when disabled — the margin histograms and
+    /// near-miss counters are gated with it, so enabling the ledger is
+    /// the single switch for all per-feature observability.
+    pub fn record_report(&self, report: &ScreenReport, source: &'static str) {
+        if !self.enabled() {
+            return;
+        }
+        let eps = self.near_miss_eps();
+        let sweep = self.sweep_seq.fetch_add(1, Ordering::Relaxed);
+        let rule = report.rule.name();
+        let tele = crate::telemetry::global();
+        let margin_kept =
+            tele.histogram_with("screening.margin.kept", BucketSpec::MARGINS);
+        let margin_rejected =
+            tele.histogram_with("screening.margin.rejected", BucketSpec::MARGINS);
+        let mut near = 0u64;
+        for (j, (&bound, &kept)) in report.bounds.iter().zip(&report.keep).enumerate() {
+            let margin = bound - KEEP_THRESHOLD;
+            let near_miss = margin.is_finite() && margin.abs() < eps;
+            near += near_miss as u64;
+            if margin.is_finite() {
+                let h = if kept { &margin_kept } else { &margin_rejected };
+                h.record(margin.abs());
+            }
+            self.push(Verdict {
+                feature: j,
+                rule,
+                lambda1: report.lambda1,
+                lambda2: report.lambda2,
+                bound,
+                threshold: KEEP_THRESHOLD,
+                margin,
+                kept,
+                near_miss,
+                source,
+                sweep,
+            });
+        }
+        if near > 0 {
+            tele.counter("screening.near_miss").add(near);
+            tele.counter(&format!("screening.{rule}.near_miss")).add(near);
+        }
+        tele.counter("diag.ledger.recorded").add(report.keep.len() as u64);
+    }
+
+    /// Records an audit's violations (screened-out features whose KKT
+    /// correlation exceeds 1): `bound` is the measured `|f̂ᵀθ|`, the
+    /// threshold is the KKT limit 1, and the margin is the excess.
+    pub fn record_audit(&self, report: &ScreenReport, audit: &AuditReport) {
+        if !self.enabled() || audit.violations.is_empty() {
+            return;
+        }
+        let sweep = self.sweep_seq.fetch_add(1, Ordering::Relaxed);
+        for v in &audit.violations {
+            self.push(Verdict {
+                feature: v.feature,
+                rule: report.rule.name(),
+                lambda1: report.lambda1,
+                lambda2: report.lambda2,
+                bound: v.correlation,
+                threshold: 1.0,
+                margin: v.correlation - 1.0,
+                kept: false,
+                near_miss: false,
+                source: "audit",
+                sweep,
+            });
+        }
+        crate::telemetry::global()
+            .counter("diag.ledger.recorded")
+            .add(audit.violations.len() as u64);
+    }
+
+    fn push(&self, v: Verdict) {
+        let mut shard = self.shards[v.feature % SHARDS].lock().unwrap();
+        if shard.len() >= self.capacity_per_shard {
+            shard.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            crate::telemetry::global().counter("diag.ledger.dropped").inc();
+        }
+        shard.push_back(v);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Every buffered verdict for feature `j`, oldest first.
+    pub fn feature_history(&self, j: usize) -> Vec<Verdict> {
+        let shard = self.shards[j % SHARDS].lock().unwrap();
+        shard.iter().filter(|v| v.feature == j).cloned().collect()
+    }
+
+    /// Every buffered near-miss verdict, tightest margin first.
+    pub fn near_misses(&self) -> Vec<Verdict> {
+        let mut out: Vec<Verdict> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.lock().unwrap().iter().filter(|v| v.near_miss).cloned().collect::<Vec<_>>()
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            a.margin
+                .abs()
+                .partial_cmp(&b.margin.abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.feature.cmp(&b.feature))
+                .then(a.sweep.cmp(&b.sweep))
+        });
+        out
+    }
+
+    /// The `n` buffered near-misses with the tightest margins.
+    pub fn top_near_misses(&self, n: usize) -> Vec<Verdict> {
+        let mut out = self.near_misses();
+        out.truncate(n);
+        out
+    }
+
+    /// Every buffered verdict, ordered by `(sweep, feature)`.
+    pub fn snapshot(&self) -> Vec<Verdict> {
+        let mut out: Vec<Verdict> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().iter().cloned().collect::<Vec<_>>())
+            .collect();
+        out.sort_by(|a, b| a.sweep.cmp(&b.sweep).then(a.feature.cmp(&b.feature)));
+        out
+    }
+
+    /// Number of buffered verdicts.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Verdicts evicted so far (monotone).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Clears the buffer (the monotone recorded/dropped totals and the
+    /// sweep sequence are kept).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+
+    /// Aggregate view of the current buffer.
+    pub fn summary(&self) -> LedgerSummary {
+        let mut by_rule: Vec<(&'static str, usize, usize, usize)> = Vec::new();
+        let mut near_misses = 0usize;
+        let mut buffered = 0usize;
+        for s in &self.shards {
+            for v in s.lock().unwrap().iter() {
+                buffered += 1;
+                near_misses += v.near_miss as usize;
+                let entry = match by_rule.iter_mut().find(|(r, ..)| *r == v.rule) {
+                    Some(e) => e,
+                    None => {
+                        by_rule.push((v.rule, 0, 0, 0));
+                        by_rule.last_mut().unwrap()
+                    }
+                };
+                if v.kept {
+                    entry.1 += 1;
+                } else {
+                    entry.2 += 1;
+                }
+                entry.3 += v.near_miss as usize;
+            }
+        }
+        by_rule.sort_by_key(|e| e.0);
+        LedgerSummary {
+            enabled: self.enabled(),
+            near_miss_eps: self.near_miss_eps(),
+            recorded: self.recorded.load(Ordering::Relaxed),
+            dropped: self.dropped(),
+            buffered,
+            near_misses,
+            by_rule,
+        }
+    }
+}
+
+/// The process-wide ledger. Capacity comes from
+/// `PALLAS_LEDGER_CAPACITY` (default [`DEFAULT_CAPACITY`]); recording
+/// starts enabled iff `PALLAS_LEDGER` is `1`/`true`/`yes`/`on`; the
+/// epsilon can be preset with `PALLAS_NEAR_MISS_EPS`.
+pub fn global() -> &'static Ledger {
+    static GLOBAL: OnceLock<Ledger> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let capacity = std::env::var("PALLAS_LEDGER_CAPACITY")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        let ledger = Ledger::new(capacity);
+        if let Ok(v) = std::env::var("PALLAS_LEDGER") {
+            let v = v.to_ascii_lowercase();
+            ledger.set_enabled(matches!(v.as_str(), "1" | "true" | "yes" | "on"));
+        }
+        if let Ok(v) = std::env::var("PALLAS_NEAR_MISS_EPS") {
+            if let Ok(eps) = v.parse::<f64>() {
+                ledger.set_near_miss_eps(eps);
+            }
+        }
+        ledger
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::rule::RuleKind;
+
+    fn report(rule: RuleKind, bounds: Vec<f64>) -> ScreenReport {
+        let keep = bounds.iter().map(|&b| b >= KEEP_THRESHOLD).collect();
+        ScreenReport { rule, lambda1: 1.0, lambda2: 0.5, keep, bounds, seconds: 0.0 }
+    }
+
+    #[test]
+    fn disabled_ledger_records_nothing() {
+        let l = Ledger::new(64);
+        l.record_report(&report(RuleKind::Paper, vec![2.0, 0.1]), "seq");
+        assert!(l.is_empty());
+        assert!(!l.summary().enabled);
+    }
+
+    #[test]
+    fn verdicts_match_report_and_flag_near_misses() {
+        let l = Ledger::new(64);
+        l.set_enabled(true);
+        l.set_near_miss_eps(1e-2);
+        let rep =
+            report(RuleKind::Paper, vec![2.0, 0.1, 1.0 + 5e-3, KEEP_THRESHOLD - 5e-3]);
+        l.record_report(&rep, "seq");
+        let all = l.snapshot();
+        assert_eq!(all.len(), 4);
+        for (j, v) in all.iter().enumerate() {
+            assert_eq!(v.feature, j);
+            assert_eq!(v.kept, rep.keep[j], "feature {j}");
+            assert_eq!(v.bound, rep.bounds[j]);
+            assert_eq!(v.margin, rep.bounds[j] - KEEP_THRESHOLD);
+            assert_eq!(v.rule, "paper");
+            assert_eq!(v.source, "seq");
+        }
+        assert!(!all[0].near_miss && !all[1].near_miss);
+        assert!(all[2].near_miss && all[3].near_miss);
+        // top-N sorts by |margin|: feature 3 (5e-3 below threshold) and
+        // feature 2 (~5e-3 above, slightly larger due to KEEP_MARGIN).
+        let top = l.top_near_misses(1);
+        assert_eq!(top.len(), 1);
+        assert!(top[0].margin.abs() <= l.near_misses()[1].margin.abs());
+        assert_eq!(near_miss_count(&rep.bounds, 1e-2), 2);
+    }
+
+    #[test]
+    fn feature_history_isolates_one_feature() {
+        let l = Ledger::new(1024);
+        l.set_enabled(true);
+        for step in 0..5 {
+            let mut rep = report(RuleKind::Sphere, vec![2.0; 40]);
+            rep.lambda2 = 1.0 - 0.1 * step as f64;
+            l.record_report(&rep, "par");
+        }
+        let h = l.feature_history(17);
+        assert_eq!(h.len(), 5);
+        for (i, v) in h.iter().enumerate() {
+            assert_eq!(v.feature, 17);
+            assert_eq!(v.sweep, i as u64);
+        }
+        // sweeps arrive oldest-first
+        assert!(h[0].lambda2 > h[4].lambda2);
+    }
+
+    #[test]
+    fn bounded_shards_evict_and_count_drops() {
+        let l = Ledger::new(SHARDS); // one verdict per shard
+        l.set_enabled(true);
+        let rep = report(RuleKind::Paper, vec![2.0; 3 * SHARDS]);
+        l.record_report(&rep, "seq");
+        assert_eq!(l.len(), SHARDS);
+        assert_eq!(l.dropped(), 2 * SHARDS as u64);
+        let s = l.summary();
+        assert_eq!(s.recorded, 3 * SHARDS as u64);
+        assert_eq!(s.dropped, 2 * SHARDS as u64);
+        assert_eq!(s.buffered, SHARDS);
+        // survivors are the newest verdicts (largest feature indices)
+        assert!(l.snapshot().iter().all(|v| v.feature >= 2 * SHARDS));
+    }
+
+    #[test]
+    fn summary_breaks_down_by_rule_and_encodes() {
+        let l = Ledger::new(256);
+        l.set_enabled(true);
+        l.record_report(&report(RuleKind::Paper, vec![2.0, 0.1]), "seq");
+        l.record_report(&report(RuleKind::Sphere, vec![0.2, 1.0 + 1e-3]), "batch");
+        let s = l.summary();
+        assert_eq!(s.buffered, 4);
+        assert_eq!(s.near_misses, 1);
+        assert_eq!(s.by_rule, vec![("paper", 1, 1, 0), ("sphere", 1, 1, 1)]);
+        let enc = s.to_json().encode();
+        assert!(enc.contains("\"by_rule\""), "{enc}");
+        assert!(enc.contains("\"sphere\""), "{enc}");
+        let enc_v = l.snapshot()[0].to_json().encode();
+        assert!(enc_v.contains("\"rule\":\"paper\""), "{enc_v}");
+    }
+
+    #[test]
+    fn audit_hook_records_violations() {
+        use crate::screening::variants::Violation;
+        let l = Ledger::new(64);
+        l.set_enabled(true);
+        let rep = report(RuleKind::Strong, vec![0.1, 0.2]);
+        let audit = AuditReport {
+            rule: RuleKind::Strong,
+            lambda2: 0.5,
+            checked: 2,
+            tol: 1e-8,
+            violations: vec![Violation { feature: 1, correlation: 1.25, weight: 0.0 }],
+        };
+        l.record_audit(&rep, &audit);
+        let h = l.feature_history(1);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].source, "audit");
+        assert!((h[0].margin - 0.25).abs() < 1e-12);
+        assert!(!h[0].kept);
+    }
+
+    #[test]
+    fn csv_row_matches_header_width() {
+        let l = Ledger::new(16);
+        l.set_enabled(true);
+        l.record_report(&report(RuleKind::Paper, vec![2.0]), "seq");
+        let v = &l.snapshot()[0];
+        assert_eq!(v.csv_row().len(), Verdict::CSV_HEADER.len());
+    }
+}

@@ -1,0 +1,40 @@
+//! Diagnostics: screening provenance and solver-convergence recorders.
+//!
+//! The rest of the telemetry stack ([`crate::telemetry`]) answers
+//! *aggregate* questions — rejection ratios, latency percentiles,
+//! counter totals. This module answers the two per-entity questions
+//! those aggregates cannot:
+//!
+//! * **"Which rule screened feature j at λ, and by what margin?"** —
+//!   the [`ledger`] records one [`ledger::Verdict`] per feature per
+//!   sweep (rule, bound vs. threshold, normalized margin, kept or
+//!   rejected, near-miss flag) into a bounded, lock-sharded ring.
+//!   Margin magnitudes aggregate into the `screening.margin.kept` /
+//!   `screening.margin.rejected` histograms and near-misses into
+//!   per-rule `screening.<rule>.near_miss` counters.
+//! * **"Why did the solver stall on this reduced problem?"** — the
+//!   [`convergence`] monitor watches every duality-gap check in CD and
+//!   FISTA, detects stalls / divergence / non-finite gaps, increments
+//!   `solver.anomalies`, emits warn instants into the trace ring, and
+//!   archives a per-solve summary in a bounded global log.
+//!
+//! Surfaces: the `pallas explain` CLI subcommand (per-feature query,
+//! top-N near-misses, JSONL/CSV export via [`crate::report::diag`]),
+//! the `{"cmd":"diag"}` protocol command on the server, and per-step
+//! `near_miss` / `anomalies` fields on
+//! [`crate::path::stats::PathStep`].
+//!
+//! Recording is **observational only**: the ledger reads finished
+//! [`crate::screening::rule::ScreenReport`]s, so screening results are
+//! bit-identical with the ledger on or off (asserted in
+//! `rust/tests/diag.rs`). The ledger is disabled by default; enable it
+//! with `PALLAS_LEDGER=1`, the `--ledger` CLI flag, a
+//! `{"cmd":"diag","enable":true}` request, or
+//! [`ledger::Ledger::set_enabled`]. The convergence monitor is always
+//! on (it only works at gap checks, which are already O(nnz)).
+
+pub mod convergence;
+pub mod ledger;
+
+pub use convergence::{log_snapshot, ConvergenceSummary, Monitor};
+pub use ledger::{Ledger, LedgerSummary, Verdict};

@@ -90,6 +90,15 @@
 //! the `{"cmd":"stats"}` protocol command (JSON snapshot, optionally a
 //! Prometheus text rendering — see [`report::prometheus`]).
 //!
+//! Per-feature and per-iteration diagnostics live in [`diag`]: a
+//! screening provenance ledger (`--ledger` / `PALLAS_LEDGER=1`)
+//! recording one verdict per feature per sweep, and an always-on
+//! solver convergence monitor flagging stalls and divergence
+//! (`solver.anomalies`). Query them with the `pallas explain`
+//! subcommand or the `{"cmd":"diag"}` protocol command. The full
+//! operator's guide — every env var, flag, and surface in one place —
+//! is `docs/OBSERVABILITY.md`.
+//!
 //! ## Safety audit
 //!
 //! `path --audit` (or [`path::runner::PathConfig::audit`]) re-checks
@@ -105,6 +114,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod diag;
 pub mod error;
 pub mod linalg;
 pub mod path;

@@ -41,7 +41,7 @@ fn run(args: &[String]) -> Result<()> {
     for key in [
         "data", "rule", "solver", "steps", "min-frac", "tol", "workers", "engine",
         "artifacts", "addr", "lambda-frac", "lambda2-frac", "out", "csv",
-        "trace-out", "audit",
+        "trace-out", "audit", "ledger", "near-miss-eps", "feature", "top", "export",
     ] {
         if let Some(v) = cli.flags.get(key) {
             raw.set(key, v);
@@ -55,6 +55,7 @@ fn run(args: &[String]) -> Result<()> {
         "solve" => cmd_solve(&cfg, raw.get_f64("lambda-frac", 0.5)?),
         "screen" => cmd_screen(&cfg, raw.get_f64("lambda2-frac", 0.5)?),
         "path" => cmd_path(&cfg, raw.get("csv")),
+        "explain" => cmd_explain(&cfg, &raw),
         "serve" => cmd_serve(&cfg),
         other => Err(svmscreen::error::Error::config(format!(
             "unknown command {other:?}"
@@ -168,6 +169,11 @@ fn cmd_screen(cfg: &RunConfig, lambda2_frac: f64) -> Result<()> {
 }
 
 fn cmd_path(cfg: &RunConfig, csv: Option<&str>) -> Result<()> {
+    if cfg.ledger {
+        let ledger = svmscreen::diag::ledger::global();
+        ledger.set_enabled(true);
+        ledger.set_near_miss_eps(cfg.near_miss_eps);
+    }
     let p = load_problem(cfg)?;
     let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps);
     let report = run_path(&p, &grid, &cfg.path_config())?;
@@ -200,6 +206,105 @@ fn cmd_path(cfg: &RunConfig, csv: Option<&str>) -> Result<()> {
             &rows,
         )?;
         println!("wrote {path}");
+    }
+    if cfg.ledger {
+        print_ledger_summary(&svmscreen::diag::ledger::global().summary());
+    }
+    Ok(())
+}
+
+fn print_ledger_summary(s: &svmscreen::diag::LedgerSummary) {
+    println!(
+        "ledger: {} verdict(s) recorded, {} buffered, {} evicted, {} near-miss(es) (eps {:.1e})",
+        s.recorded, s.buffered, s.dropped, s.near_misses, s.near_miss_eps
+    );
+    for (rule, kept, rejected, near) in &s.by_rule {
+        println!("  rule {rule:<7} kept {kept:>7}  rejected {rejected:>7}  near-miss {near:>5}");
+    }
+}
+
+fn print_verdict(v: &svmscreen::diag::Verdict) {
+    println!(
+        "  sweep {:>3}  feature {:>6}  {}/{}  lambda2 {:.4e}  bound {:.6}  margin {:+.3e}  {}{}",
+        v.sweep,
+        v.feature,
+        v.rule,
+        v.source,
+        v.lambda2,
+        v.bound,
+        v.margin,
+        if v.kept { "kept" } else { "rejected" },
+        if v.near_miss { "  NEAR MISS" } else { "" },
+    );
+}
+
+/// `explain`: a path run with the provenance ledger armed, followed by
+/// the decision story — per-rule near-miss breakdown, the closest
+/// calls, an optional single-feature history, and any solver-anomaly
+/// convergence summaries. `--export FILE` dumps every verdict.
+fn cmd_explain(cfg: &RunConfig, raw: &RawConfig) -> Result<()> {
+    let ledger = svmscreen::diag::ledger::global();
+    ledger.set_enabled(true);
+    ledger.set_near_miss_eps(cfg.near_miss_eps);
+    ledger.clear();
+    svmscreen::diag::convergence::clear_log();
+
+    let p = load_problem(cfg)?;
+    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps);
+    let report = run_path(&p, &grid, &cfg.path_config())?;
+    println!("{}", report.summary_table());
+    print_ledger_summary(&ledger.summary());
+
+    if raw.get("feature").is_some() {
+        let j = raw.get_usize("feature", 0)?;
+        let history = ledger.feature_history(j);
+        println!("\nfeature {j}: {} recorded verdict(s)", history.len());
+        for v in &history {
+            print_verdict(v);
+        }
+    }
+
+    let top_n = raw.get_usize("top", 10)?;
+    let top = ledger.top_near_misses(top_n);
+    if top.is_empty() {
+        println!("\nno near-misses within eps {:.1e}", ledger.near_miss_eps());
+    } else {
+        println!(
+            "\ntop {} near-miss verdict(s), closest call first (eps {:.1e}):",
+            top.len(),
+            ledger.near_miss_eps()
+        );
+        for v in &top {
+            print_verdict(v);
+        }
+    }
+
+    let anomalous: Vec<_> = svmscreen::diag::convergence::log_snapshot()
+        .into_iter()
+        .filter(|s| s.anomalies > 0)
+        .collect();
+    if !anomalous.is_empty() {
+        println!("\nsolver anomalies:");
+        for s in &anomalous {
+            println!(
+                "  {} at lambda {}: {} anomaly(ies) ({} stall(s), {} divergence(s)) \
+                 over {} iteration(s), rel_gap {:.2e}, converged={}",
+                s.solver,
+                fnum(s.lambda),
+                s.anomalies,
+                s.stalls,
+                s.divergences,
+                s.iterations,
+                s.rel_gap,
+                s.converged
+            );
+        }
+    }
+
+    if let Some(path) = raw.get("export") {
+        let records = ledger.snapshot();
+        svmscreen::report::diag::write_auto(path, &records)?;
+        println!("\nwrote {path} ({} verdict(s))", records.len());
     }
     Ok(())
 }

@@ -54,6 +54,10 @@ pub struct PathConfig {
     /// `path.cache.hits` / `path.cache.misses`. Disable only to test
     /// equivalence against from-scratch gathers.
     pub incremental: bool,
+    /// Near-miss epsilon: a feature whose screening bound lands within
+    /// this distance of the keep threshold counts toward the step's
+    /// `near_miss` field ([`crate::diag::ledger::near_miss_count`]).
+    pub near_miss_eps: f64,
 }
 
 impl Default for PathConfig {
@@ -66,6 +70,7 @@ impl Default for PathConfig {
             audit: false,
             workers: crate::coordinator::pool::default_workers(),
             incremental: true,
+            near_miss_eps: crate::diag::ledger::DEFAULT_NEAR_MISS_EPS,
         }
     }
 }
@@ -177,12 +182,16 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
         )?;
         let mut kept = screen.kept_indices();
         let screen_seconds = screen.seconds;
+        // Per-step bound-tightness summary; cheap (one pass over the
+        // bounds), so it reports even when the full ledger is off.
+        let near_miss =
+            crate::diag::ledger::near_miss_count(&screen.bounds, cfg.near_miss_eps);
         drop(screen_span);
 
         // 2. Reduced solve with warm start.
         let solve_span = Span::enter_labeled("path.solve", Some(format!("lambda {lambda:.4e}")));
         let mut violations = 0usize;
-        let (w, b, iterations, rel_gap) = loop {
+        let (w, b, iterations, rel_gap, anomalies) = loop {
             let rep = if kept.len() == m {
                 crate::solver::api::solve_with_curvature(
                     cfg.solver,
@@ -228,7 +237,7 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
 
             // 3. Unsafe-rule repair loop: verify discarded features.
             if cfg.rule.is_safe() {
-                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap);
+                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap, rep.anomalies);
             }
             let theta = crate::svm::dual::theta_from_primal(
                 &problem.x,
@@ -246,7 +255,7 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
                 .filter(|&j| problem.x.col_dot(j, &ytheta).abs() > 1.0 + cfg.violation_tol)
                 .collect();
             if violators.is_empty() {
-                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap);
+                break (rep.w, rep.b, rep.iterations, rep.gap.rel_gap, rep.anomalies);
             }
             violations += violators.len();
             kept.append(&mut violators);
@@ -298,6 +307,8 @@ pub fn run_path(problem: &Problem, grid: &[f64], cfg: &PathConfig) -> Result<Pat
             solve_seconds,
             violations,
             audit_violations,
+            near_miss,
+            anomalies,
         };
         step.emit();
         steps.push(step);

@@ -32,18 +32,26 @@ pub struct PathStep {
     /// KKT violations found by the safety audit (`None` when the audit
     /// did not run; `Some(0)` is a clean audited step).
     pub audit_violations: Option<usize>,
+    /// Near-miss features: screening bounds within the configured
+    /// epsilon of the keep threshold ([`crate::diag::ledger`]).
+    pub near_miss: usize,
+    /// Solver convergence anomalies flagged at this step
+    /// ([`crate::diag::convergence`]).
+    pub anomalies: usize,
 }
 
 impl PathStep {
     /// Header row matching [`PathStep::row`].
-    pub fn header() -> [&'static str; 9] {
+    pub fn header() -> [&'static str; 11] {
         [
             "lambda/lmax",
             "kept",
             "screened",
             "reject%",
+            "nmiss",
             "nnz",
             "iters",
+            "anom",
             "rel_gap",
             "screen_s",
             "solve_s",
@@ -71,6 +79,8 @@ impl PathStep {
                     None => Json::Null,
                 },
             ),
+            ("near_miss", Json::Num(self.near_miss as f64)),
+            ("anomalies", Json::Num(self.anomalies as f64)),
         ])
     }
 
@@ -83,6 +93,8 @@ impl PathStep {
         tele.counter("path.features_screened").add(self.screened as u64);
         tele.counter("path.features_kept").add(self.kept as u64);
         tele.counter("path.violations").add(self.violations as u64);
+        tele.counter("path.near_miss").add(self.near_miss as u64);
+        tele.counter("path.anomalies").add(self.anomalies as u64);
         if let Some(n) = self.audit_violations {
             tele.counter("path.audit_steps").inc();
             tele.counter("path.audit_violations").add(n as u64);
@@ -110,14 +122,16 @@ impl PathStep {
     }
 
     /// A table row for reports.
-    pub fn row(&self) -> [String; 9] {
+    pub fn row(&self) -> [String; 11] {
         [
             format!("{:.4}", self.lambda_frac),
             self.kept.to_string(),
             self.screened.to_string(),
             format!("{:.1}", 100.0 * self.rejection),
+            self.near_miss.to_string(),
             self.nnz.to_string(),
             self.iterations.to_string(),
+            self.anomalies.to_string(),
             format!("{:.2e}", self.rel_gap),
             format!("{:.4}", self.screen_seconds),
             format!("{:.4}", self.solve_seconds),
@@ -136,6 +150,10 @@ pub struct PathTotals {
     pub mean_rejection: f64,
     /// Total violations repaired (unsafe rules).
     pub violations: usize,
+    /// Total near-miss features across steps.
+    pub near_miss: usize,
+    /// Total solver anomalies across steps.
+    pub anomalies: usize,
 }
 
 /// Computes totals from steps.
@@ -146,6 +164,8 @@ pub fn totals(steps: &[PathStep]) -> PathTotals {
         t.solve_seconds += s.solve_seconds;
         t.mean_rejection += s.rejection;
         t.violations += s.violations;
+        t.near_miss += s.near_miss;
+        t.anomalies += s.anomalies;
     }
     if !steps.is_empty() {
         t.mean_rejection /= steps.len() as f64;
@@ -176,6 +196,8 @@ mod tests {
             solve_seconds: 2.0 * ss,
             violations: vs,
             audit_violations: None,
+            near_miss: 3,
+            anomalies: 1,
         }
     }
 
@@ -186,6 +208,8 @@ mod tests {
         assert_eq!(t.solve_seconds, 6.0);
         assert!((t.mean_rejection - 0.3).abs() < 1e-12);
         assert_eq!(t.violations, 3);
+        assert_eq!(t.near_miss, 6);
+        assert_eq!(t.anomalies, 2);
     }
 
     #[test]

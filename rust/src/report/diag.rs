@@ -1,0 +1,97 @@
+//! Exporters for diag-ledger verdicts: JSONL (one verdict per line)
+//! and RFC-4180 CSV. Used by `pallas explain --export FILE` and the
+//! `f1_rejection` bench's CI artifact.
+
+use crate::diag::ledger::Verdict;
+use std::path::Path;
+
+/// Renders verdicts as JSONL — one flat JSON object per line.
+pub fn to_jsonl(records: &[Verdict]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().encode());
+        out.push('\n');
+    }
+    out
+}
+
+/// Writes verdicts as a JSONL file (parent directories created).
+pub fn write_jsonl<P: AsRef<Path>>(path: P, records: &[Verdict]) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, to_jsonl(records))
+}
+
+/// Writes verdicts as a CSV file with the [`Verdict::CSV_HEADER`]
+/// columns.
+pub fn write_csv<P: AsRef<Path>>(path: P, records: &[Verdict]) -> std::io::Result<()> {
+    let rows: Vec<Vec<String>> = records.iter().map(Verdict::csv_row).collect();
+    super::csv::write_file(path, &Verdict::CSV_HEADER, &rows)
+}
+
+/// Writes verdicts choosing the format by extension: `.csv` → CSV,
+/// anything else → JSONL.
+pub fn write_auto<P: AsRef<Path>>(path: P, records: &[Verdict]) -> std::io::Result<()> {
+    let is_csv = path
+        .as_ref()
+        .extension()
+        .map(|e| e.eq_ignore_ascii_case("csv"))
+        .unwrap_or(false);
+    if is_csv {
+        write_csv(path, records)
+    } else {
+        write_jsonl(path, records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::parse;
+
+    fn verdict(feature: usize, margin: f64) -> Verdict {
+        Verdict {
+            feature,
+            rule: "paper",
+            lambda1: 1.0,
+            lambda2: 0.5,
+            bound: 1.0 + margin,
+            threshold: 1.0,
+            margin,
+            kept: margin >= 0.0,
+            near_miss: margin.abs() < 1e-2,
+            source: "seq",
+            sweep: 0,
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips_per_line() {
+        let text = to_jsonl(&[verdict(0, 0.5), verdict(1, -1e-3)]);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = parse(lines[1]).unwrap();
+        assert_eq!(v.get("feature").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("near_miss"), Some(&crate::coordinator::protocol::Json::Bool(true)));
+    }
+
+    #[test]
+    fn auto_picks_format_by_extension() {
+        let dir = std::env::temp_dir().join("svmscreen_diag_export_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let records = [verdict(3, 2e-3)];
+        let csv_path = dir.join("out.csv");
+        let jsonl_path = dir.join("out.jsonl");
+        write_auto(&csv_path, &records).unwrap();
+        write_auto(&jsonl_path, &records).unwrap();
+        let csv = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(csv.starts_with("sweep,feature,rule"), "{csv}");
+        assert_eq!(csv.lines().count(), 2);
+        let jsonl = std::fs::read_to_string(&jsonl_path).unwrap();
+        assert!(jsonl.starts_with('{'), "{jsonl}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

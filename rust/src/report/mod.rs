@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod diag;
 pub mod prometheus;
 pub mod table;
 pub mod timer;

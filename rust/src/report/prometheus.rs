@@ -97,4 +97,24 @@ mod tests {
         assert!(text.contains("empty_seconds_count 0"), "{text}");
         assert!(text.contains("NaN"), "{text}");
     }
+
+    #[test]
+    fn empty_registry_renders_empty_document() {
+        let r = Registry::new();
+        assert!(render(&r.snapshot()).is_empty());
+    }
+
+    #[test]
+    fn non_finite_gauges_render_as_nan_samples() {
+        let r = Registry::new();
+        r.gauge("g.nan").set(f64::NAN);
+        r.gauge("g.inf").set(f64::INFINITY);
+        let text = render(&r.snapshot());
+        assert!(text.contains("g_nan NaN"), "{text}");
+        assert!(text.contains("g_inf NaN"), "{text}");
+        // Still "name value" shaped — a scraper can parse every line.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "{line}");
+        }
+    }
 }

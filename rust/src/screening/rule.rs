@@ -193,7 +193,7 @@ pub fn screen_all_with<X: FeatureMatrix>(
         bounds,
         seconds: t0.elapsed().as_secs_f64(),
     };
-    record_screen_telemetry(&report, 1);
+    record_screen_telemetry(&report, 1, "seq");
     Ok(report)
 }
 
@@ -202,7 +202,17 @@ pub fn screen_all_with<X: FeatureMatrix>(
 /// histogram. `sweeps` is the number of O(nnz) data passes the report
 /// amortizes (1 for [`screen_all`]; `1/k`-shared for [`screen_multi`],
 /// which calls this once per target with `sweeps = 0` after the first).
-pub(crate) fn record_screen_telemetry(report: &ScreenReport, sweeps: u64) {
+/// `source` tags which sweep path produced the report (`"seq"` /
+/// `"batch"` / `"par"`) and flows into the provenance ledger
+/// ([`crate::diag::ledger`]), which — when enabled — records one
+/// per-feature verdict per report. The ledger only *reads* the sealed
+/// report, so screening results are identical either way.
+pub(crate) fn record_screen_telemetry(
+    report: &ScreenReport,
+    sweeps: u64,
+    source: &'static str,
+) {
+    crate::diag::ledger::global().record_report(report, source);
     use crate::telemetry::BucketSpec;
     let tele = crate::telemetry::global();
     let name = report.rule.name();
@@ -310,7 +320,7 @@ pub fn screen_multi_with<X: FeatureMatrix>(
         .collect();
     for (i, rep) in reports.iter().enumerate() {
         // The whole batch shares one data sweep; count it once.
-        record_screen_telemetry(rep, if i == 0 { 1 } else { 0 });
+        record_screen_telemetry(rep, if i == 0 { 1 } else { 0 }, "batch");
     }
     Ok(reports)
 }

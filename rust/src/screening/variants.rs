@@ -153,7 +153,13 @@ pub fn audit_screen<X: FeatureMatrix>(
             );
         }
     }
-    AuditReport { rule: report.rule, lambda2: report.lambda2, checked, tol, violations }
+    let audit =
+        AuditReport { rule: report.rule, lambda2: report.lambda2, checked, tol, violations };
+    // Violations are provenance too: when the ledger is on, each one
+    // lands as a `source:"audit"` verdict (bound = the measured KKT
+    // correlation, threshold = 1).
+    crate::diag::ledger::global().record_audit(report, &audit);
+    audit
 }
 
 #[cfg(test)]

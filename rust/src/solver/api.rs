@@ -65,6 +65,9 @@ pub struct SolveReport {
     pub seconds: f64,
     /// `(iteration, rel_gap)` samples (when `record_gap_trace`).
     pub gap_trace: Vec<(usize, f64)>,
+    /// Convergence anomalies (stalls / divergence / non-finite gaps)
+    /// flagged by the diag monitor ([`crate::diag::convergence`]).
+    pub anomalies: usize,
 }
 
 impl SolveReport {

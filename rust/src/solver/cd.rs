@@ -137,6 +137,7 @@ impl CdSolver {
         let mut converged = false;
         let mut iterations = 0;
         let mut gap_trace = Vec::new();
+        let mut monitor = crate::diag::convergence::Monitor::new("cd", lambda);
 
         'outer: for epoch in 0..opts.max_iter {
             iterations = epoch + 1;
@@ -196,6 +197,7 @@ impl CdSolver {
                 if opts.record_gap_trace {
                     gap_trace.push((epoch + 1, rep.rel_gap));
                 }
+                monitor.observe(epoch + 1, rep.rel_gap);
                 crate::tele_trace!(
                     "solver.cd",
                     "epoch {} rel_gap {:.3e} frozen {}",
@@ -255,6 +257,7 @@ impl CdSolver {
             converged,
             crate::report::timer::fmt_duration(seconds)
         );
+        let anomalies = monitor.finish(iterations, converged, gap.rel_gap);
         Ok(SolveReport {
             w,
             b,
@@ -264,6 +267,7 @@ impl CdSolver {
             converged,
             seconds,
             gap_trace,
+            anomalies,
         })
     }
 }

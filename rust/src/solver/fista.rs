@@ -114,6 +114,7 @@ impl Solver for FistaSolver {
         let mut converged = false;
         let mut iterations = 0;
         let mut gap_trace = Vec::new();
+        let mut monitor = crate::diag::convergence::Monitor::new("fista", lambda);
 
         for it in 0..opts.max_iter {
             iterations = it + 1;
@@ -154,6 +155,7 @@ impl Solver for FistaSolver {
                 if opts.record_gap_trace {
                     gap_trace.push((it + 1, rep.rel_gap));
                 }
+                monitor.observe(it + 1, rep.rel_gap);
                 crate::tele_trace!(
                     "solver.fista",
                     "step {} rel_gap {:.3e}",
@@ -183,6 +185,7 @@ impl Solver for FistaSolver {
             converged,
             crate::report::timer::fmt_duration(seconds)
         );
+        let anomalies = monitor.finish(iterations, converged, gap.rel_gap);
         Ok(SolveReport {
             w,
             b: dp.b,
@@ -192,6 +195,7 @@ impl Solver for FistaSolver {
             converged,
             seconds,
             gap_trace,
+            anomalies,
         })
     }
 }

@@ -88,6 +88,12 @@ impl BucketSpec {
     /// resolution — batch sizes, payload bytes, kept-set sizes.
     pub const COUNTS: BucketSpec = BucketSpec { min_exp: 0, max_exp: 40, per_pow2: 1 };
 
+    /// Margin buckets: `[2⁻⁴⁰, 2¹⁰]` at power-of-two resolution —
+    /// screening-bound margins `|bound − threshold|`, which span from
+    /// ulp-scale near-misses to O(1) comfortable rejections
+    /// (`screening.margin.*`, recorded by the diag ledger).
+    pub const MARGINS: BucketSpec = BucketSpec { min_exp: -40, max_exp: 10, per_pow2: 1 };
+
     /// Number of buckets (plus one overflow bucket at the end).
     fn n_buckets(&self) -> usize {
         ((self.max_exp - self.min_exp) * self.per_pow2) as usize + 1

@@ -34,9 +34,12 @@
 //! | safety audit | `screening.violations`, `screening.audit.*` | error event per KKT violation |
 //! | path runner | `path.*` + spans `path.run/screen/solve` | per-step `PathStep` events (debug) |
 //! | coordinator | `server.*` request/latency/batch bytes | connection + request events |
+//! | diagnostics | `screening.margin.*`, `screening.*.near_miss`, `solver.anomalies`, `diag.ledger.*`, `telemetry.trace.dropped` | `solver.anomaly` warn instants |
 //!
-//! The server exposes all of it live via the `{"cmd":"stats"}` and
-//! `{"cmd":"trace"}` protocol commands.
+//! The server exposes all of it live via the `{"cmd":"stats"}`,
+//! `{"cmd":"trace"}` and `{"cmd":"diag"}` protocol commands. Per-entity
+//! diagnostics (the provenance ledger and convergence log feeding the
+//! `diag.*` metrics) live in [`crate::diag`].
 //!
 //! ## Quick use
 //!

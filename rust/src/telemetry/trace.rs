@@ -20,14 +20,18 @@
 //! * `PALLAS_TRACE_CAPACITY=N` — ring capacity (default 16384; `0`
 //!   disables recording entirely).
 //!
-//! The ring is bounded: when full, the oldest record is dropped and the
-//! `trace.dropped` counter increments, so long `serve` runs never grow
-//! without bound.
+//! The ring is bounded: when full, the oldest record is evicted — never
+//! silently. Evictions are counted twice: per-drain ([`TraceRing::dropped`],
+//! reset by [`TraceRing::drain`] and reported by `{"cmd":"trace"}`) and
+//! cumulatively ([`TraceRing::dropped_total`], mirrored live into the
+//! `telemetry.trace.dropped` gauge), so long `serve` runs never grow
+//! without bound and lost records are always visible in stats snapshots.
 
 use crate::coordinator::protocol::Json;
+use crate::telemetry::metrics::Gauge;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Default ring capacity when `PALLAS_TRACE_CAPACITY` is unset.
@@ -122,6 +126,7 @@ fn category(name: &str) -> &str {
 struct RingInner {
     buf: VecDeque<TraceRecord>,
     dropped: u64,
+    dropped_total: u64,
 }
 
 /// A bounded, thread-safe recorder of [`TraceRecord`]s. The global
@@ -129,6 +134,7 @@ struct RingInner {
 pub struct TraceRing {
     capacity: usize,
     inner: Mutex<RingInner>,
+    dropped_gauge: OnceLock<Arc<Gauge>>,
 }
 
 impl TraceRing {
@@ -140,13 +146,23 @@ impl TraceRing {
             inner: Mutex::new(RingInner {
                 buf: VecDeque::with_capacity(capacity.min(1024)),
                 dropped: 0,
+                dropped_total: 0,
             }),
+            dropped_gauge: OnceLock::new(),
         }
     }
 
     /// The configured capacity.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Mirrors the cumulative eviction count into `gauge` on every
+    /// future eviction (the global ring attaches the registry's
+    /// `telemetry.trace.dropped`). First attachment wins.
+    pub fn attach_dropped_gauge(&self, gauge: Arc<Gauge>) {
+        gauge.set(self.inner.lock().unwrap().dropped_total as f64);
+        let _ = self.dropped_gauge.set(gauge);
     }
 
     /// Records one trace record, evicting the oldest when full.
@@ -158,6 +174,10 @@ impl TraceRing {
         if inner.buf.len() >= self.capacity {
             inner.buf.pop_front();
             inner.dropped += 1;
+            inner.dropped_total += 1;
+            if let Some(g) = self.dropped_gauge.get() {
+                g.set(inner.dropped_total as f64);
+            }
         }
         inner.buf.push_back(rec);
     }
@@ -177,6 +197,12 @@ impl TraceRing {
     /// [`drain`]: TraceRing::drain
     pub fn dropped(&self) -> u64 {
         self.inner.lock().unwrap().dropped
+    }
+
+    /// Records evicted since the ring was created — never reset, and
+    /// mirrored into the attached gauge ([`TraceRing::attach_dropped_gauge`]).
+    pub fn dropped_total(&self) -> u64 {
+        self.inner.lock().unwrap().dropped_total
     }
 
     /// Removes and returns every buffered record (oldest first) and
@@ -202,7 +228,13 @@ pub fn recorder() -> &'static TraceRing {
             .ok()
             .and_then(|v| v.trim().parse::<usize>().ok())
             .unwrap_or(DEFAULT_CAPACITY);
-        TraceRing::new(capacity)
+        let ring = TraceRing::new(capacity);
+        // Register the eviction gauge up front so it shows as 0 in
+        // stats snapshots before the first wrap.
+        ring.attach_dropped_gauge(
+            crate::telemetry::global().gauge("telemetry.trace.dropped"),
+        );
+        ring
     })
 }
 
@@ -350,9 +382,33 @@ mod tests {
         let recs = ring.snapshot();
         assert_eq!(recs.first().unwrap().ts_us, 6);
         assert_eq!(recs.last().unwrap().ts_us, 9);
-        // Drain resets the dropped counter.
+        // Drain resets the per-drain counter, not the cumulative one.
         ring.drain();
         assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.dropped_total(), 6);
+    }
+
+    #[test]
+    fn dropped_gauge_tracks_cumulative_evictions() {
+        let r = crate::telemetry::Registry::new();
+        let ring = TraceRing::new(2);
+        ring.attach_dropped_gauge(r.gauge("telemetry.trace.dropped"));
+        assert_eq!(r.gauge("telemetry.trace.dropped").get(), 0.0);
+        for i in 0..5 {
+            ring.record(rec("a", RecordKind::Span, i));
+        }
+        assert_eq!(ring.dropped(), 3);
+        assert_eq!(ring.dropped_total(), 3);
+        assert_eq!(r.gauge("telemetry.trace.dropped").get(), 3.0);
+        ring.drain();
+        assert_eq!(ring.dropped(), 0);
+        // The gauge survives the drain: it mirrors the total.
+        assert_eq!(r.gauge("telemetry.trace.dropped").get(), 3.0);
+        for i in 0..5 {
+            ring.record(rec("b", RecordKind::Span, i));
+        }
+        assert_eq!(ring.dropped_total(), 6);
+        assert_eq!(r.gauge("telemetry.trace.dropped").get(), 6.0);
     }
 
     #[test]

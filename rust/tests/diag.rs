@@ -1,0 +1,244 @@
+//! Diagnostics guarantees: the provenance ledger is purely
+//! observational (ledger-on screening is bit-identical to ledger-off),
+//! `explain`-style queries answer from a recorded path run, and an
+//! injected solver stall produces a counted anomaly plus a warn
+//! instant in the exported Chrome trace.
+
+use std::sync::Mutex;
+use svmscreen::coordinator::parallel::screen_all_parallel_with;
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::path::grid::geometric;
+use svmscreen::path::runner::{run_path, PathConfig};
+use svmscreen::screening::rule::RuleKind;
+use svmscreen::solver::api::{solve, SolveOptions, SolverKind};
+use svmscreen::svm::problem::Problem;
+
+/// The ledger is process-global; tests that toggle it must not
+/// interleave (a poisoned lock just means another test failed — take
+/// the guard anyway so its failure stays the primary signal).
+static LEDGER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_ledger() -> std::sync::MutexGuard<'static, ()> {
+    LEDGER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const RULES: [RuleKind; 4] =
+    [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong];
+
+/// Acceptance: ledger-enabled screening is bit-identical to ledger-off
+/// — same keep decisions AND same bound bits — across rules, dense and
+/// sparse panels, sequential and block-parallel sweeps.
+#[test]
+fn ledger_recording_is_bit_identical_to_off() {
+    let _guard = lock_ledger();
+    let ledger = svmscreen::diag::ledger::global();
+    let specs = [SynthSpec::dense(50, 80, 1301), SynthSpec::text(70, 300, 1302)];
+    for spec in specs {
+        let p = Problem::from_dataset(&spec.generate());
+        let lmax = p.lambda_max();
+        let theta1 = p.theta_at_lambda_max().theta();
+        for rule in RULES {
+            for workers in [1, 4] {
+                ledger.set_enabled(false);
+                let off = screen_all_parallel_with(
+                    rule, &p.x, &p.y, &theta1, lmax, 0.5 * lmax, workers, None,
+                )
+                .unwrap();
+                ledger.set_enabled(true);
+                let on = screen_all_parallel_with(
+                    rule, &p.x, &p.y, &theta1, lmax, 0.5 * lmax, workers, None,
+                )
+                .unwrap();
+                assert_eq!(off.keep, on.keep, "{rule:?} workers={workers}");
+                assert_eq!(off.bounds.len(), on.bounds.len());
+                for (j, (a, b)) in off.bounds.iter().zip(&on.bounds).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{rule:?} workers={workers} bound[{j}]: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+    ledger.set_enabled(false);
+    ledger.clear();
+}
+
+/// Verdicts faithfully mirror the sweep: one per feature, margins are
+/// bound − threshold, near-misses respect the configured epsilon, and
+/// the export round-trips through JSONL.
+#[test]
+fn ledger_verdicts_and_export_roundtrip() {
+    let _guard = lock_ledger();
+    let ledger = svmscreen::diag::ledger::global();
+    ledger.clear();
+    ledger.set_enabled(true);
+    ledger.set_near_miss_eps(0.5);
+
+    let p = Problem::from_dataset(&SynthSpec::text(60, 200, 1303).generate());
+    let lmax = p.lambda_max();
+    let theta1 = p.theta_at_lambda_max().theta();
+    let rep =
+        screen_all_parallel_with(RuleKind::Paper, &p.x, &p.y, &theta1, lmax, 0.6 * lmax, 1, None)
+            .unwrap();
+
+    let verdicts = ledger.snapshot();
+    assert_eq!(verdicts.len(), 200, "one verdict per feature");
+    for v in &verdicts {
+        assert_eq!(v.rule, "paper");
+        assert_eq!(v.kept, rep.keep[v.feature]);
+        if v.bound.is_finite() {
+            assert_eq!(v.margin, v.bound - v.threshold);
+            assert_eq!(v.near_miss, v.margin.abs() < 0.5);
+        }
+    }
+    let near = ledger.near_misses();
+    assert!(!near.is_empty(), "eps=0.5 must flag some near-misses");
+    // Sorted closest-call first.
+    for pair in near.windows(2) {
+        assert!(pair[0].margin.abs() <= pair[1].margin.abs());
+    }
+    let top = ledger.top_near_misses(3);
+    assert_eq!(top.len(), 3.min(near.len()));
+
+    let dir = std::env::temp_dir().join("svmscreen_diag_it_export");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("verdicts.jsonl");
+    svmscreen::report::diag::write_jsonl(&path, &near).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), near.len());
+    assert!(text.lines().all(|l| l.starts_with('{') && l.contains("\"margin\"")));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    ledger.set_enabled(false);
+    ledger.set_near_miss_eps(svmscreen::diag::ledger::DEFAULT_NEAR_MISS_EPS);
+    ledger.clear();
+}
+
+/// The `explain` flow: a recorded path run answers a per-feature query
+/// — every step's verdict for that feature, in sweep order.
+#[test]
+fn explain_query_answers_from_a_path_run() {
+    let _guard = lock_ledger();
+    let ledger = svmscreen::diag::ledger::global();
+    ledger.clear();
+    ledger.set_enabled(true);
+
+    let p = Problem::from_dataset(&SynthSpec::dense(40, 30, 1304).generate());
+    let grid = geometric(p.lambda_max(), 0.2, 5);
+    let report = run_path(&p, &grid, &PathConfig::default()).unwrap();
+    assert_eq!(report.steps.len(), 5);
+
+    let summary = ledger.summary();
+    assert!(summary.enabled);
+    assert!(
+        summary.recorded >= (5 * 30) as u64,
+        "5 sweeps x 30 features, got {}",
+        summary.recorded
+    );
+    for j in [0usize, 7, 29] {
+        let history = ledger.feature_history(j);
+        assert!(!history.is_empty(), "feature {j} must have verdicts");
+        assert!(history.iter().all(|v| v.feature == j && v.rule == "paper"));
+        // Sweep order is chronological and the targets come off the grid.
+        for pair in history.windows(2) {
+            assert!(pair[0].sweep <= pair[1].sweep);
+        }
+        for v in &history {
+            assert!(
+                grid.iter().any(|&lam| lam.to_bits() == v.lambda2.to_bits()),
+                "lambda2 {} not on the grid",
+                v.lambda2
+            );
+        }
+    }
+    // Per-step near-miss counts surfaced in the path report.
+    assert!(report.steps.iter().all(|s| s.near_miss <= 30));
+
+    ledger.set_enabled(false);
+    ledger.clear();
+}
+
+/// Acceptance: an injected stall (tolerance far below the numerical
+/// floor, gap checked every step) produces counted solver anomalies, a
+/// `solver.anomalies` increment, and a `solver.anomaly` warn instant
+/// that survives into the Chrome trace export.
+#[test]
+fn injected_stall_is_counted_and_traced() {
+    // Warn instants only mirror into the ring when warn is enabled.
+    svmscreen::telemetry::init_from_env();
+    svmscreen::telemetry::set_stderr_level(Some(svmscreen::telemetry::Level::Warn));
+
+    let before = *svmscreen::telemetry::global()
+        .snapshot()
+        .counters
+        .get("solver.anomalies")
+        .unwrap_or(&0);
+
+    let p = Problem::from_dataset(&SynthSpec::dense(30, 10, 1305).generate());
+    let opts = SolveOptions {
+        tol: 1e-18, // unreachable: rel_gap plateaus at the numerical floor
+        max_iter: 300,
+        gap_check_every: 1,
+        ..Default::default()
+    };
+    let rep =
+        solve(SolverKind::Fista, &p.x, &p.y, 0.5 * p.lambda_max(), None, &opts).unwrap();
+    assert!(!rep.converged, "tol 1e-18 must be unreachable");
+    assert!(rep.anomalies > 0, "plateaued solve must flag a stall");
+
+    let after = *svmscreen::telemetry::global()
+        .snapshot()
+        .counters
+        .get("solver.anomalies")
+        .unwrap_or(&0);
+    assert!(
+        after >= before + rep.anomalies as u64,
+        "counter moved {before} -> {after}, expected +{}",
+        rep.anomalies
+    );
+
+    // The warn instant lands in the trace ring and the Chrome export.
+    let records = svmscreen::telemetry::trace::recorder().snapshot();
+    assert!(
+        records.iter().any(|r| r.name == "solver.anomaly"),
+        "expected a solver.anomaly instant among {} records",
+        records.len()
+    );
+    let doc = svmscreen::telemetry::trace::chrome_trace(&records).encode();
+    assert!(doc.contains("solver.anomaly"), "instant missing from Chrome doc");
+    let dir = std::env::temp_dir().join("svmscreen_diag_it_trace");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    std::fs::write(&path, &doc).unwrap();
+    assert!(std::fs::read_to_string(&path).unwrap().contains("solver.anomaly"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Every solve archives a convergence summary into the global log.
+#[test]
+fn solves_archive_convergence_summaries() {
+    let p = Problem::from_dataset(&SynthSpec::dense(30, 12, 1306).generate());
+    let lambda = 0.437_711 * p.lambda_max();
+    let opts = SolveOptions { tol: 1e-6, ..Default::default() };
+    let cd = solve(SolverKind::Cd, &p.x, &p.y, lambda, None, &opts).unwrap();
+    let fi = solve(SolverKind::Fista, &p.x, &p.y, lambda, None, &opts).unwrap();
+    assert!(cd.converged && fi.converged);
+
+    let log = svmscreen::diag::convergence::log_snapshot();
+    // Find our solves by exact lambda (the log is process-global).
+    let cd_entry = log
+        .iter()
+        .find(|s| s.solver == "cd" && s.lambda.to_bits() == lambda.to_bits())
+        .expect("cd summary archived");
+    assert!(cd_entry.converged);
+    assert_eq!(cd_entry.iterations, cd.iterations);
+    let fi_entry = log
+        .iter()
+        .find(|s| s.solver == "fista" && s.lambda.to_bits() == lambda.to_bits())
+        .expect("fista summary archived");
+    assert!(fi_entry.converged);
+    assert!(fi_entry.checks > 0);
+}

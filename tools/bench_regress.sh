@@ -1,0 +1,56 @@
+#!/bin/sh
+# Bench regression gate: compares fresh BENCH_<id>.json artifacts
+# (written by `cargo bench` into rust/) against the committed baselines
+# in tools/baselines/, and fails when wall_seconds regressed by more
+# than REGRESS_PCT percent (default 20).
+#
+# Usage: sh tools/bench_regress.sh t1 f1 f2 f5
+#
+# Baselines are seeded from a CI run's bench-artifacts upload: download
+# the artifact, copy the BENCH_<id>.json files into tools/baselines/,
+# and commit them (see tools/baselines/README.md). A missing baseline
+# is reported but never fails the gate, so the first run on a new bench
+# passes and produces the file to commit.
+set -u
+
+: "${REGRESS_PCT:=20}"
+fresh_dir="rust"
+base_dir="tools/baselines"
+status=0
+
+field() { grep -o "\"$2\"[: ]*[0-9.eE+-]*" "$1" | head -1 | cut -d: -f2 | tr -d ' '; }
+
+for id in "$@"; do
+  fresh="$fresh_dir/BENCH_${id}.json"
+  base="$base_dir/BENCH_${id}.json"
+  if [ ! -f "$fresh" ]; then
+    echo "bench-regress: $id: no fresh artifact at $fresh (bench skipped or failed); skipping"
+    continue
+  fi
+  if [ ! -f "$base" ]; then
+    echo "bench-regress: $id: no baseline at $base; seed it from this run's artifact"
+    continue
+  fi
+  fresh_s=$(field "$fresh" wall_seconds)
+  base_s=$(field "$base" wall_seconds)
+  if [ -z "$fresh_s" ] || [ -z "$base_s" ]; then
+    echo "bench-regress: $id: missing wall_seconds (fresh='$fresh_s' base='$base_s'); skipping"
+    continue
+  fi
+  verdict=$(awk -v f="$fresh_s" -v b="$base_s" -v pct="$REGRESS_PCT" 'BEGIN {
+    if (b <= 0) { print "skip"; exit }
+    delta = 100 * (f - b) / b;
+    printf "%s %.1f", (delta > pct ? "FAIL" : "ok"), delta;
+  }')
+  case "$verdict" in
+    skip)
+      echo "bench-regress: $id: baseline wall_seconds is zero; skipping" ;;
+    FAIL*)
+      echo "bench-regress: $id: FAIL — wall ${fresh_s}s vs baseline ${base_s}s (${verdict#FAIL }% > ${REGRESS_PCT}%)"
+      status=1 ;;
+    *)
+      echo "bench-regress: $id: ok — wall ${fresh_s}s vs baseline ${base_s}s (${verdict#ok }%)" ;;
+  esac
+done
+
+exit $status
