@@ -20,7 +20,7 @@ fn main() {
     let mut paper_rej: Vec<f64> = Vec::new();
     for ds in common::dataset_trio(1.0) {
         let p = Problem::from_dataset(&ds);
-        let grid = geometric(p.lambda_max(), 0.05, 30);
+        let grid = geometric(p.lambda_max(), 0.05, 30).unwrap();
         let mut series: Vec<(RuleKind, Vec<f64>)> = Vec::new();
         for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere] {
             let rep = run_path(&p, &grid, &PathConfig { rule, ..Default::default() })

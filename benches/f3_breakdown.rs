@@ -16,7 +16,7 @@ fn main() {
     let ds = svmscreen::data::synth::SynthSpec::text(1000, 10000, 9103).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
-    let grid = geometric(p.lambda_max(), 0.05, 30);
+    let grid = geometric(p.lambda_max(), 0.05, 30).unwrap();
 
     let with = run_path(&p, &grid, &PathConfig { rule: RuleKind::Paper, ..Default::default() })
         .expect("screened path");

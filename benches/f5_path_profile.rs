@@ -17,7 +17,7 @@ fn main() {
     let ds = svmscreen::data::synth::SynthSpec::text(600, 5000, 9108).generate();
     println!("workload: {}", ds.describe());
     let p = Problem::from_dataset(&ds);
-    let grid = geometric(p.lambda_max(), 0.05, 25);
+    let grid = geometric(p.lambda_max(), 0.05, 25).unwrap();
     let rep = run_path(&p, &grid, &PathConfig::default()).expect("path");
 
     let mut t = Table::new(

@@ -24,7 +24,7 @@ fn main() {
     let mut csv = Vec::new();
     for ds in common::dataset_trio(1.0) {
         let p = Problem::from_dataset(&ds);
-        let grid = geometric(p.lambda_max(), 0.05, 30);
+        let grid = geometric(p.lambda_max(), 0.05, 30).unwrap();
         // FISTA only on the (small) dense set — it is the slow comparator
         // that demonstrates solver-independence, not the workhorse.
         let solvers: Vec<SolverKind> = if ds.name.contains("dense") {

@@ -7,12 +7,12 @@
 
 mod common;
 
-use svmscreen::coordinator::screen_all_parallel;
+use svmscreen::coordinator::{screen_all_parallel, ShardedScreener};
 use svmscreen::prelude::*;
 use svmscreen::report::table::Table;
 use svmscreen::report::timer::BenchStats;
 use svmscreen::runtime::{screen_all_pjrt, PjrtEngine, PjrtScreenOptions};
-use svmscreen::screening::rule::screen_all;
+use svmscreen::screening::rule::{screen_all, screen_multi_with};
 
 fn main() {
     common::banner("T4", "screening throughput by engine and size");
@@ -132,4 +132,89 @@ fn main() {
             svmscreen::coordinator::protocol::Json::Bool(engine.is_some()),
         ),
     );
+
+    shard_section();
+}
+
+/// T4-shard: the server batch path, sharded (`--shards 4`) vs unsharded,
+/// on the largest text problem above. Both sides screen one batch of 8
+/// λ₂ targets against the same cached stats; the kept sets are
+/// bit-identical (asserted), so the artifact isolates the fan-out cost
+/// vs the per-shard cache-locality win. Emits `BENCH_t4_shard.json` for
+/// the regress gate and the CI step summary.
+fn shard_section() {
+    const SHARDS: usize = 4;
+    common::banner("T4-shard", "batch screening: 4-way sharded vs unsharded");
+    let t0 = std::time::Instant::now();
+    let ds = svmscreen::data::synth::SynthSpec::text(1000, 50_000, 9106).generate();
+    let p = Problem::from_dataset(&ds);
+    let lambda1 = 0.7 * p.lambda_max();
+    let theta1 = common::solved_theta(&p, lambda1);
+    let lambda2s: Vec<f64> = (1..=8).map(|k| (0.9 - 0.05 * k as f64) * lambda1).collect();
+    let m = p.m();
+    // Warm the path-wide cache outside the timed region (both sides
+    // reuse it; the unsharded sweep reads it directly, the shards hold
+    // remapped copies built here).
+    let _ = p.cache();
+    let sc = ShardedScreener::build(&p, SHARDS, SHARDS).expect("shard build");
+
+    let flat = BenchStats::measure(1, 5, || {
+        screen_multi_with(
+            RuleKind::Paper,
+            &p.x,
+            &p.y,
+            &theta1,
+            lambda1,
+            &lambda2s,
+            Some(p.cache()),
+        )
+        .unwrap();
+    });
+    let sharded = BenchStats::measure(1, 5, || {
+        sc.screen_multi(RuleKind::Paper, &p.y, &theta1, lambda1, &lambda2s).unwrap();
+    });
+    // Bit-identity spot check — a bench must not certify a wrong result.
+    let a = screen_multi_with(
+        RuleKind::Paper,
+        &p.x,
+        &p.y,
+        &theta1,
+        lambda1,
+        &lambda2s,
+        Some(p.cache()),
+    )
+    .unwrap();
+    let b = sc.screen_multi(RuleKind::Paper, &p.y, &theta1, lambda1, &lambda2s).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.keep, y.keep, "sharded kept set diverged");
+    }
+
+    let fps = |secs: f64| (m * lambda2s.len()) as f64 / secs;
+    let unsharded_fps = fps(flat.median());
+    let sharded_fps = fps(sharded.median());
+    println!(
+        "unsharded: {unsharded_fps:.0} features/s   sharded x{SHARDS}: {sharded_fps:.0} features/s   ({:.2}x)",
+        sharded_fps / unsharded_fps.max(1e-12)
+    );
+    common::emit_artifact(
+        svmscreen::report::bench::BenchArtifact::new(
+            "t4_shard",
+            "batch of 8 lambda2 targets on text 1000x50k, 4 shards vs unsharded",
+        )
+        .wall_seconds(sharded.median())
+        .speedup(flat.median() / sharded.median().max(1e-12))
+        .extra(
+            "unsharded_fps",
+            svmscreen::coordinator::protocol::Json::Num(unsharded_fps),
+        )
+        .extra(
+            "sharded_fps",
+            svmscreen::coordinator::protocol::Json::Num(sharded_fps),
+        )
+        .extra(
+            "shards",
+            svmscreen::coordinator::protocol::Json::Num(SHARDS as f64),
+        ),
+    );
+    println!("[t4_shard] section wall {:.2}s", t0.elapsed().as_secs_f64());
 }

@@ -20,7 +20,7 @@ fn main() -> Result<()> {
     let ds = svmscreen::data::synth::SynthSpec::text(n, m, 42).generate();
     println!("workload: {}", ds.describe());
     let problem = Problem::from_dataset(&ds);
-    let grid = geometric(problem.lambda_max(), 0.05, steps);
+    let grid = geometric(problem.lambda_max(), 0.05, steps)?;
     println!(
         "path: {} lambdas, lambda_max = {:.4}, down to {:.2}% of lambda_max\n",
         steps,

@@ -81,7 +81,7 @@ COMMANDS:
             --data ... [--steps ...] [--rule ...] [--feature J] [--top N]
             [--near-miss-eps 1e-2] [--export FILE(.jsonl|.csv)]
   serve     start the screening service
-            --data ... [--addr 127.0.0.1:7878] [--workers N]
+            --data ... [--addr 127.0.0.1:7878] [--workers N] [--shards K]
   help      this text
 
 Config file: --config FILE (key = value lines; CLI flags override).
@@ -104,6 +104,10 @@ FLAGS:
                     threshold is below E (default 1e-2)
   --export FILE     explain: dump every recorded verdict; .csv extension
                     writes CSV, anything else JSONL
+  --shards K        serve: partition the feature set into K nnz-balanced
+                    shards, each with a long-lived reduced problem and
+                    remapped cache reused across batches; kept sets stay
+                    bit-identical to unsharded. K <= 1 disables sharding
 
 ENVIRONMENT:
   PALLAS_LOG              stderr log level: error|warn|info|debug|trace|off
@@ -119,6 +123,7 @@ ENVIRONMENT:
   PALLAS_LEDGER_CAPACITY  max buffered verdicts before eviction
                           (default 65536)
   PALLAS_NEAR_MISS_EPS    near-miss threshold (default 1e-2)
+  PALLAS_SHARDS           default for --shards (serve; <= 1 unsharded)
 
 See docs/OBSERVABILITY.md for the full observability tour.
 ";

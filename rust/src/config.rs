@@ -98,6 +98,10 @@ pub struct RunConfig {
     pub tol: f64,
     /// Worker threads for parallel screening / the server.
     pub workers: usize,
+    /// Feature shards for the screening server (`--shards`, or the
+    /// `PALLAS_SHARDS` env var as the default). `<= 1` disables
+    /// sharding.
+    pub shards: usize,
     /// Execution engine: `native` or `pjrt`.
     pub engine: String,
     /// Artifact directory for the PJRT engine.
@@ -114,6 +118,15 @@ pub struct RunConfig {
     /// Near-miss threshold: a feature whose screening margin lands
     /// within this epsilon of the keep/reject boundary is flagged.
     pub near_miss_eps: f64,
+}
+
+/// Default shard count: `PALLAS_SHARDS` when set and parseable,
+/// otherwise 1 (unsharded).
+fn default_shards() -> usize {
+    std::env::var("PALLAS_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
 }
 
 impl RunConfig {
@@ -138,6 +151,7 @@ impl RunConfig {
             tol: raw.get_f64("tol", 1e-6)?,
             workers: raw
                 .get_usize("workers", crate::coordinator::pool::default_workers())?,
+            shards: raw.get_usize("shards", default_shards())?,
             engine,
             artifact_dir: raw.get("artifacts").unwrap_or("artifacts").to_string(),
             addr: raw.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
@@ -269,6 +283,22 @@ mod tests {
         assert_eq!(cfg.trace_out.as_deref(), Some("out/trace.json"));
         assert!(cfg.audit);
         assert!(cfg.path_config().audit);
+    }
+
+    #[test]
+    fn shards_resolve() {
+        // File/flag value wins; the env-var default applies otherwise.
+        let mut raw = RawConfig::default();
+        raw.set("shards", "4");
+        assert_eq!(RunConfig::from_raw(&raw).unwrap().shards, 4);
+        // Default path: PALLAS_SHARDS when exported, else 1. Tests may
+        // run under either, so only pin it when the env var is absent.
+        if std::env::var("PALLAS_SHARDS").is_err() {
+            assert_eq!(RunConfig::from_raw(&RawConfig::default()).unwrap().shards, 1);
+        }
+        let mut raw = RawConfig::default();
+        raw.set("shards", "abc");
+        assert!(RunConfig::from_raw(&raw).is_err());
     }
 
     #[test]

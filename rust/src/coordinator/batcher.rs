@@ -15,6 +15,25 @@ use crate::telemetry::{self, BucketSpec};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
+/// A batchable request that knows its real in-memory footprint.
+///
+/// The default counts only the inline struct bytes; requests that carry
+/// heap payloads (request vectors, shared dual points held alive by the
+/// queue) override [`BatchItem::payload_bytes`] so
+/// `coordinator.batch.bytes` reflects actual queue memory instead of
+/// underreporting by `size_of::<R>()`.
+pub trait BatchItem {
+    /// Bytes this request pins in memory while queued: inline struct
+    /// size plus any heap it owns or keeps alive.
+    fn payload_bytes(&self) -> usize {
+        std::mem::size_of_val(self)
+    }
+}
+
+// Test/bench item types used through the batcher are plain scalars.
+impl BatchItem for i32 {}
+impl BatchItem for u64 {}
+
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
@@ -33,7 +52,7 @@ impl Default for BatchPolicy {
 /// Blocks for the next batch: waits indefinitely for the first item,
 /// then drains until the policy triggers. Returns an empty vec when the
 /// channel is closed and drained.
-pub fn next_batch<R>(rx: &Receiver<R>, policy: &BatchPolicy) -> Vec<R> {
+pub fn next_batch<R: BatchItem>(rx: &Receiver<R>, policy: &BatchPolicy) -> Vec<R> {
     let mut batch = Vec::new();
     // Block for the first item.
     match rx.recv() {
@@ -56,18 +75,20 @@ pub fn next_batch<R>(rx: &Receiver<R>, policy: &BatchPolicy) -> Vec<R> {
     batch
 }
 
-/// Meters one flushed batch: item count plus approximate payload bytes
-/// (`len * size_of::<R>()` — shallow, but proportional to queue memory
-/// for the fixed-size request structs the server batches).
-fn record_batch_telemetry<R>(batch: &[R]) {
+/// Meters one flushed batch: item count plus payload bytes summed from
+/// each item's [`BatchItem::payload_bytes`], so heap-backed requests
+/// (e.g. screen jobs holding an `Arc`'d dual point) are not
+/// underreported as `len * size_of::<R>()`.
+fn record_batch_telemetry<R: BatchItem>(batch: &[R]) {
     if batch.is_empty() {
         return;
     }
     let tele = telemetry::global();
     tele.histogram_with("coordinator.batch.items", BucketSpec::COUNTS)
         .record(batch.len() as f64);
+    let bytes: usize = batch.iter().map(|r| r.payload_bytes()).sum();
     tele.histogram_with("coordinator.batch.bytes", BucketSpec::COUNTS)
-        .record((batch.len() * std::mem::size_of::<R>()) as f64);
+        .record(bytes as f64);
 }
 
 #[cfg(test)]
@@ -126,6 +147,31 @@ mod tests {
         assert_eq!(items.spec(), crate::telemetry::BucketSpec::COUNTS);
         let bytes = tele.histogram("coordinator.batch.bytes").snapshot();
         assert!(bytes.max >= (6 * std::mem::size_of::<u64>()) as f64);
+    }
+
+    #[test]
+    fn payload_bytes_sums_heap_backing() {
+        struct Req(Vec<u8>);
+        impl BatchItem for Req {
+            fn payload_bytes(&self) -> usize {
+                std::mem::size_of::<Self>() + self.0.capacity()
+            }
+        }
+        let (tx, rx) = channel();
+        tx.send(Req(vec![0u8; 4096])).unwrap();
+        tx.send(Req(vec![0u8; 4096])).unwrap();
+        let tele = crate::telemetry::global();
+        let policy = BatchPolicy { max_batch: 2, window: Duration::from_secs(5) };
+        let b = next_batch(&rx, &policy);
+        assert_eq!(b.len(), 2);
+        // The shallow size would be 2 * size_of::<Req>() (~48 bytes);
+        // the hook must surface the 8 KiB of heap the queue pinned.
+        let bytes = tele.histogram("coordinator.batch.bytes").snapshot();
+        assert!(
+            bytes.max >= (2 * (std::mem::size_of::<Req>() + 4096)) as f64,
+            "batch.bytes max {} misses heap payload",
+            bytes.max
+        );
     }
 
     #[test]

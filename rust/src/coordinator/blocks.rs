@@ -31,23 +31,35 @@ pub fn balanced_with<X: FeatureMatrix>(
     col_nnz: Option<&[usize]>,
 ) -> Vec<Range<usize>> {
     let m = x.n_features();
+    debug_assert!(col_nnz.is_none_or(|c| c.len() == m));
+    match col_nnz {
+        Some(c) => balanced_nnz(c, n_blocks),
+        None => {
+            let counts: Vec<usize> = (0..m).map(|j| x.col_nnz(j)).collect();
+            balanced_nnz(&counts, n_blocks)
+        }
+    }
+}
+
+/// The matrix-free core of [`balanced`]: partitions `0..col_nnz.len()`
+/// into at most `n_blocks` contiguous ranges of approximately equal
+/// total nnz. This is also the shard planner's workhorse
+/// ([`crate::coordinator::shard::ShardPlan`]), which balances off the
+/// cached per-column nnz without touching the backend.
+pub fn balanced_nnz(col_nnz: &[usize], n_blocks: usize) -> Vec<Range<usize>> {
+    let m = col_nnz.len();
     let n_blocks = n_blocks.max(1).min(m.max(1));
     if m == 0 {
         return Vec::new();
     }
-    debug_assert!(col_nnz.is_none_or(|c| c.len() == m));
-    let nnz_of = |j: usize| match col_nnz {
-        Some(c) => c[j],
-        None => x.col_nnz(j),
-    };
     // +1 per column so all-zero stretches still split.
-    let total: usize = (0..m).map(|j| nnz_of(j) + 1).sum();
+    let total: usize = col_nnz.iter().map(|&c| c + 1).sum();
     let target = total.div_ceil(n_blocks);
     let mut out = Vec::with_capacity(n_blocks);
     let mut start = 0;
     let mut acc = 0usize;
-    for j in 0..m {
-        acc += nnz_of(j) + 1;
+    for (j, &c) in col_nnz.iter().enumerate() {
+        acc += c + 1;
         if acc >= target && out.len() + 1 < n_blocks {
             out.push(start..j + 1);
             start = j + 1;
@@ -101,6 +113,15 @@ mod tests {
             balanced(&ds.x, 6),
             balanced_with(&ds.x, 6, Some(&cache.col_nnz))
         );
+    }
+
+    #[test]
+    fn balanced_nnz_matches_matrix_path() {
+        let ds = SynthSpec::text(50, 200, 137).generate();
+        let counts: Vec<usize> = (0..200).map(|j| ds.x.col_nnz(j)).collect();
+        assert_eq!(balanced(&ds.x, 5), balanced_nnz(&counts, 5));
+        assert!(balanced_nnz(&[], 4).is_empty());
+        assert_eq!(balanced_nnz(&[0, 0, 0], 3).len(), 3);
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub mod parallel;
 pub mod pool;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 
 pub use parallel::{screen_all_parallel, screen_all_parallel_with};
 pub use pool::{parallel_map, ThreadPool};
+pub use shard::{Shard, ShardPlan, ShardedScreener};

@@ -11,7 +11,7 @@ use crate::data::FeatureMatrix;
 use crate::error::Result;
 use crate::screening::precompute::{FeatureStats, SharedContext};
 use crate::screening::rule::{
-    record_screen_telemetry, Rule, RuleKind, ScreenReport, ScreeningRule, KEEP_THRESHOLD,
+    record_screen_telemetry, Rule, RuleKind, ScreenReport, ScreeningRule,
 };
 
 /// Minimum `nnz + m` for which multi-threaded screening pays for its
@@ -56,7 +56,6 @@ pub fn screen_all_parallel_with<X: FeatureMatrix + Sync>(
 ) -> Result<ScreenReport> {
     let t0 = std::time::Instant::now();
     let m = x.n_features();
-    let mut keep = vec![true; m];
     let mut bounds = vec![f64::INFINITY; m];
     let work = cache.map(|c| c.nnz).unwrap_or_else(|| x.nnz()) + m;
     let workers = if work < PARALLEL_WORK_THRESHOLD { 1 } else { workers.max(1) };
@@ -79,18 +78,16 @@ pub fn screen_all_parallel_with<X: FeatureMatrix + Sync>(
         for (range, local) in ranges.iter().zip(results) {
             for (j, score) in range.clone().zip(local) {
                 bounds[j] = score;
-                keep[j] = score >= KEEP_THRESHOLD;
             }
         }
     }
-    let report = ScreenReport {
+    let report = ScreenReport::from_bounds(
         rule,
         lambda1,
         lambda2,
-        keep,
         bounds,
-        seconds: t0.elapsed().as_secs_f64(),
-    };
+        t0.elapsed().as_secs_f64(),
+    );
     // Same sweep-amortization semantics as screen_all: one report = one
     // O(nnz) data pass. (Parallel sweeps were previously invisible to
     // the screening.* counters/histograms.)

@@ -40,11 +40,24 @@
 //! stats `server.batches` / `server.batch.coalesced` plus the
 //! `server.batch.size` histogram. `{"cmd":"stats"}` exposes all of it
 //! over the wire; `PALLAS_LOG=debug` traces per-request handling on
-//! stderr.
+//! stderr. With sharding on (`ServerConfig::shards > 1`), the sweep
+//! additionally reports per-shard `coordinator.shard.<k>.{kept,
+//! screened,seconds}` and the shard-shape gauges (see
+//! [`crate::coordinator::shard`]).
+//!
+//! ## Hardening
+//!
+//! The server is built to survive its own bugs: connection handlers run
+//! under `catch_unwind` (a panic costs one connection, counted in
+//! `server.handler_panics`, never a pool worker), the dual-state mutex
+//! recovers from poisoning ([`lock_state`]), and degenerate datasets
+//! (non-positive/non-finite `lambda_max`) are rejected at
+//! [`ScreeningServer::start`] instead of panicking per-request.
 
-use crate::coordinator::batcher::{next_batch, BatchPolicy};
+use crate::coordinator::batcher::{next_batch, BatchItem, BatchPolicy};
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::protocol::{parse, Json};
+use crate::coordinator::shard::ShardedScreener;
 use crate::error::{Error, Result};
 use crate::screening::rule::{screen_multi_with, RuleKind};
 use crate::solver::api::{solve, SolveOptions, SolverKind};
@@ -69,6 +82,17 @@ pub struct ServerConfig {
     pub rule: RuleKind,
     /// Solver options for `solve` requests.
     pub solve: SolveOptions,
+    /// Feature shards for the batch executor (`--shards`/`PALLAS_SHARDS`).
+    /// `> 1` builds a [`ShardedScreener`]: per-shard long-lived gathered
+    /// columns + remapped cache, per-shard metrics, bit-identical kept
+    /// sets. `<= 1` keeps the unsharded whole-matrix sweep (no duplicate
+    /// storage).
+    pub shards: usize,
+    /// Test-only fault injection: enables the `{"cmd":"panic"}` request,
+    /// which panics inside the handler *while holding the state lock* —
+    /// exercising both the pool's panic containment and the poisoned-
+    /// mutex recovery. Never enable outside tests.
+    pub fault_injection: bool,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +103,8 @@ impl Default for ServerConfig {
             batch: BatchPolicy::default(),
             rule: RuleKind::Paper,
             solve: SolveOptions::default(),
+            shards: 1,
+            fault_injection: false,
         }
     }
 }
@@ -95,6 +121,17 @@ struct ScreenJob {
     want_indices: bool,
     state: DualState,
     reply: Sender<Json>,
+}
+
+impl BatchItem for ScreenJob {
+    /// Inline struct plus the `Arc`'d dual point the queued job keeps
+    /// alive. Counting the full θ₁ vector per job is an upper bound
+    /// (coalesced jobs share one allocation), but it is the memory the
+    /// queue *pins*: the vector cannot be freed while any job holds it.
+    fn payload_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.state.theta1.len() * std::mem::size_of::<f64>()
+    }
 }
 
 /// Service metrics (monotone counters).
@@ -119,6 +156,7 @@ struct Tele {
     screen_seconds: Arc<Histogram>,
     solve_seconds: Arc<Histogram>,
     request_seconds: Arc<Histogram>,
+    handler_panics: Arc<Counter>,
 }
 
 impl Tele {
@@ -133,6 +171,7 @@ impl Tele {
             screen_seconds: t.histogram("server.screen.seconds"),
             solve_seconds: t.histogram("server.solve.seconds"),
             request_seconds: t.histogram("server.request.seconds"),
+            handler_panics: t.counter("server.handler_panics"),
         }
     }
 }
@@ -145,6 +184,21 @@ struct Shared {
     metrics: Metrics,
     tele: Tele,
     stop: AtomicBool,
+    /// Sharded batch executor (`cfg.shards > 1`); `None` keeps the
+    /// unsharded whole-matrix sweep without duplicating column storage.
+    screener: Option<ShardedScreener>,
+    fault_injection: bool,
+}
+
+/// Locks the dual state, recovering from poisoning. A handler that
+/// panicked mid-update can only have left `DualState` consistent — both
+/// fields are written together under the lock and the struct has no
+/// invariant spanning the write — so inheriting the last value is safe,
+/// and one crashed handler must not wedge every future connection (the
+/// pre-recovery behavior: every later `.lock().unwrap()` panicked too,
+/// killing its pool worker, until no workers remained).
+fn lock_state(shared: &Shared) -> std::sync::MutexGuard<'_, DualState> {
+    shared.state.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// A running screening service.
@@ -158,13 +212,35 @@ pub struct ScreeningServer {
 
 impl ScreeningServer {
     /// Starts the service on `cfg.addr` with the given problem.
+    ///
+    /// Degenerate data is rejected here, not discovered as a panic in
+    /// some later handler: a non-positive or non-finite `lambda_max`
+    /// (all-zero features, NaN labels) means no λ-grid and no dual point
+    /// exist, so `start` returns an [`Error`] instead of serving a
+    /// process that panics on every `info`/`screen`.
     pub fn start(problem: Problem, cfg: ServerConfig) -> Result<Self> {
+        let lmax = problem.lambda_max();
+        if !(lmax.is_finite() && lmax > 0.0) {
+            return Err(Error::data(format!(
+                "cannot serve '{}': lambda_max = {lmax} (expected positive \
+                 and finite; is the dataset all-zero or mislabeled?)",
+                problem.name
+            )));
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| Error::coordinator(format!("bind {}: {e}", cfg.addr)))?;
         let addr = listener.local_addr()?;
 
+        // Shard the feature axis before moving the problem: each shard
+        // gathers its columns + remapped cache once, then reuses them
+        // for every batch this server ever screens.
+        let screener = if cfg.shards > 1 {
+            Some(ShardedScreener::build(&problem, cfg.shards, cfg.workers)?)
+        } else {
+            None
+        };
         let init = DualState {
-            lambda1: problem.lambda_max(),
+            lambda1: lmax,
             theta1: Arc::new(problem.theta_at_lambda_max().theta()),
         };
         let shared = Arc::new(Shared {
@@ -175,6 +251,8 @@ impl ScreeningServer {
             metrics: Metrics::default(),
             tele: Tele::new(),
             stop: AtomicBool::new(false),
+            screener,
+            fault_injection: cfg.fault_injection,
         });
 
         // Screening executor: drains the job channel in batches.
@@ -210,7 +288,23 @@ impl ScreeningServer {
                 let shared = Arc::clone(&accept_shared);
                 let tx = job_tx.clone();
                 pool.execute(move || {
-                    let _ = handle_connection(stream, &shared, &tx);
+                    // Contain handler panics: an uncaught unwind kills
+                    // the pool worker permanently, so `workers` panics
+                    // would leave the server accepting connections it
+                    // can never serve. The connection is lost (client
+                    // sees EOF); the worker survives for the next one.
+                    let outcome = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            let _ = handle_connection(stream, &shared, &tx);
+                        }),
+                    );
+                    if outcome.is_err() {
+                        shared.tele.handler_panics.inc();
+                        crate::tele_debug!(
+                            "server",
+                            "connection handler panicked; worker recovered"
+                        );
+                    }
                 });
             }
             // pool drops here, joining handlers; job_tx clones die with them
@@ -282,15 +376,26 @@ fn run_screen_batch(shared: &Shared, batch: Vec<ScreenJob>) {
         );
         // The problem cache makes each batched sweep a single θ-dot per
         // feature (λ-independent stats are shared across all requests).
-        let result = screen_multi_with(
-            shared.rule,
-            &shared.problem.x,
-            &shared.problem.y,
-            &state.theta1,
-            state.lambda1,
-            &lambda2s,
-            Some(shared.problem.cache()),
-        );
+        // With sharding on, the sweep fans out across per-shard reduced
+        // problems instead — same arithmetic, bit-identical kept sets.
+        let result = match &shared.screener {
+            Some(sc) => sc.screen_multi(
+                shared.rule,
+                &shared.problem.y,
+                &state.theta1,
+                state.lambda1,
+                &lambda2s,
+            ),
+            None => screen_multi_with(
+                shared.rule,
+                &shared.problem.x,
+                &shared.problem.y,
+                &state.theta1,
+                state.lambda1,
+                &lambda2s,
+                Some(shared.problem.cache()),
+            ),
+        };
         drop(span);
         match result {
             Ok(reports) => {
@@ -416,7 +521,7 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
         "ping" => Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]),
         "info" => {
             let p = &shared.problem;
-            let st = shared.state.lock().unwrap();
+            let st = lock_state(shared);
             Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("name", Json::Str(p.name.clone())),
@@ -438,7 +543,7 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
                     let theta = crate::svm::dual::theta_from_primal(
                         &p.x, &p.y, &rep.w, rep.b, lambda,
                     );
-                    let mut st = shared.state.lock().unwrap();
+                    let mut st = lock_state(shared);
                     st.lambda1 = lambda;
                     st.theta1 = Arc::new(theta);
                     drop(st);
@@ -460,7 +565,7 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
                 Some(v) if v > 0.0 => v,
                 _ => return err_json("screen requires positive \"lambda2\""),
             };
-            let state = shared.state.lock().unwrap().clone();
+            let state = lock_state(shared).clone();
             if lambda2 >= state.lambda1 {
                 return err_json(&format!(
                     "lambda2 {lambda2} must be < current lambda1 {}",
@@ -551,6 +656,14 @@ fn dispatch_inner(cmd: &str, req: &Json, shared: &Shared, job_tx: &Sender<Screen
                 ));
             }
             Json::obj(fields)
+        }
+        // Fault injection (ServerConfig::fault_injection, tests only):
+        // panic while holding the state lock, so both the pool's panic
+        // containment and the poisoned-mutex recovery get exercised by
+        // one request. Unknown cmd when injection is off.
+        "panic" if shared.fault_injection => {
+            let _guard = lock_state(shared);
+            panic!("injected fault: handler panic while holding the state lock");
         }
         other => err_json(&format!("unknown cmd {other:?}")),
     }
@@ -863,6 +976,87 @@ mod tests {
         assert!(text.contains("server_test_nan_gauge"), "{text}");
         assert!(text.contains("server_test_empty_hist"), "{text}");
         server.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_leaves_server_responsive() {
+        let p = Problem::from_dataset(&SynthSpec::text(50, 120, 207).generate());
+        let cfg = ServerConfig {
+            workers: 2,
+            fault_injection: true,
+            ..ServerConfig::default()
+        };
+        let server = ScreeningServer::start(p, cfg).unwrap();
+        let panics = telemetry::global().counter("server.handler_panics");
+        let before = panics.get();
+        // Panic more times than there are pool workers while holding the
+        // state lock: without catch_unwind every worker dies and without
+        // poisoning recovery every later lock().unwrap() panics too.
+        for _ in 0..4 {
+            let mut c = Client::connect(server.addr).unwrap();
+            let r = c.request(&Json::obj(vec![("cmd", Json::Str("panic".into()))]));
+            assert!(r.is_err(), "panicking handler should drop its connection");
+        }
+        // The EOF races the worker's unwind; wait for all four recoveries.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while panics.get() < before + 4 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "handler panics not recorded: {} < {}",
+                panics.get(),
+                before + 4
+            );
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        // Every command class still works against the recovered server.
+        let mut c = Client::connect(server.addr).unwrap();
+        let pong =
+            c.request(&Json::obj(vec![("cmd", Json::Str("ping".into()))])).unwrap();
+        assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+        let info =
+            c.request(&Json::obj(vec![("cmd", Json::Str("info".into()))])).unwrap();
+        assert_eq!(info.get("ok"), Some(&Json::Bool(true)), "{info:?}");
+        let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+        let sol = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("solve".into())),
+                ("lambda", Json::Num(0.7 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(sol.get("ok"), Some(&Json::Bool(true)), "{sol:?}");
+        let rep = c
+            .request(&Json::obj(vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(0.5 * lmax)),
+            ]))
+            .unwrap();
+        assert_eq!(rep.get("ok"), Some(&Json::Bool(true)), "{rep:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn panic_command_requires_fault_injection() {
+        let server = start_test_server(); // fault_injection: false
+        let mut c = Client::connect(server.addr).unwrap();
+        let r = c.request(&Json::obj(vec![("cmd", Json::Str("panic".into()))])).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{r:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn degenerate_lambda_max_rejected_at_start() {
+        // All-zero features: lambda_max = 0, no dual point exists.
+        let p = Problem::new(
+            "degenerate",
+            crate::data::FeatureData::Dense(crate::data::dense::DenseMatrix::zeros(
+                10, 4,
+            )),
+            vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0],
+        );
+        let err = ScreeningServer::start(p, ServerConfig::default());
+        assert!(err.is_err(), "zero lambda_max must be rejected at start");
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("lambda_max"), "{msg}");
     }
 
     #[test]

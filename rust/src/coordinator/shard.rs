@@ -1,0 +1,380 @@
+//! Sharded screening coordinator: per-shard cache reuse across batches.
+//!
+//! The screening service holds the whole dataset resident and re-screens
+//! it for every batch. Sharding splits the *feature* axis into `K`
+//! contiguous, nnz-balanced shards ([`ShardPlan`], balanced off the
+//! cached per-column nnz), and gives each shard its own long-lived
+//! [`ReducedProblem`] — gathered columns plus a remapped
+//! [`crate::data::cache::FeatureCache`] — that persists across server
+//! batches. A batch sweep fans out across shards, each paying only its
+//! slice of the O(nnz) θ-dot pass, and the merged kept set is
+//! **bit-identical** to the unsharded sweep (asserted in
+//! `rust/tests/shard.rs`): the per-feature arithmetic is unchanged —
+//! remapped cache entries are copies of the full cache's accumulators,
+//! gathered column bytes are copies of the full matrix's columns, and
+//! the merge concatenates shard bounds back into original feature order.
+//!
+//! This is the simultaneous feature/sample-reduction scaling direction
+//! of Zhang et al. (arXiv:1607.06996) and the data-reduction serving
+//! shape of Wang et al. (arXiv:1310.7048) applied to the feature axis.
+//!
+//! ## Telemetry
+//!
+//! Each shard registers `coordinator.shard.<k>.kept` /
+//! `coordinator.shard.<k>.screened` counters and a
+//! `coordinator.shard.<k>.seconds` sweep-latency histogram, plus
+//! build-time gauges `coordinator.shard.count`,
+//! `coordinator.shard.<k>.nnz` and `coordinator.shard.imbalance`
+//! (max shard nnz over mean). Every shard sweep records a
+//! `coordinator.shard` span (labeled with the shard id) in the trace
+//! ring. All of it surfaces through `{"cmd":"stats"}` and the
+//! Prometheus rendering.
+
+use crate::coordinator::blocks;
+use crate::coordinator::pool::parallel_map;
+use crate::data::FeatureMatrix;
+use crate::error::{Error, Result};
+use crate::screening::precompute::{FeatureStats, SharedContext};
+use crate::screening::rule::{
+    record_screen_telemetry, Rule, RuleKind, ScreenReport, ScreeningRule, KEEP_THRESHOLD,
+};
+use crate::solver::reduced::ReducedProblem;
+use crate::svm::problem::Problem;
+use crate::telemetry::{self, Counter, Histogram, Span};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// A contiguous, nnz-balanced partition of the feature axis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Contiguous feature ranges, ascending, covering `0..m` exactly.
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Plans at most `k` shards over `col_nnz.len()` features, balanced
+    /// by the cached per-column nnz. `k` is clamped to `[1, m]`; heavily
+    /// skewed data may yield fewer shards than requested (the balancer
+    /// never emits empty ranges).
+    pub fn build(col_nnz: &[usize], k: usize) -> Self {
+        ShardPlan { ranges: blocks::balanced_nnz(col_nnz, k) }
+    }
+
+    /// Number of planned shards.
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Whether the plan is empty (zero features).
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// Cached per-shard telemetry handles (registry lookups happen once, at
+/// build; the sweep hot path touches only relaxed atomics).
+struct ShardTele {
+    kept: Arc<Counter>,
+    screened: Arc<Counter>,
+    seconds: Arc<Histogram>,
+}
+
+impl ShardTele {
+    fn new(id: usize) -> Self {
+        let t = telemetry::global();
+        ShardTele {
+            kept: t.counter(&format!("coordinator.shard.{id}.kept")),
+            screened: t.counter(&format!("coordinator.shard.{id}.screened")),
+            seconds: t.histogram(&format!("coordinator.shard.{id}.seconds")),
+        }
+    }
+}
+
+/// One shard: a slice of the feature space with its own long-lived
+/// gathered submatrix and remapped cache.
+pub struct Shard {
+    /// Shard index (names the shard's metrics).
+    pub id: usize,
+    /// The shard's feature range in original coordinates.
+    pub range: Range<usize>,
+    /// Long-lived reduced problem: gathered columns + remapped cache,
+    /// reused for every batch instead of re-gathering per sweep.
+    red: ReducedProblem,
+    tele: ShardTele,
+}
+
+impl Shard {
+    /// Stored entries in this shard's columns.
+    pub fn nnz(&self) -> usize {
+        self.red.cache.as_ref().map(|c| c.nnz).unwrap_or(0)
+    }
+}
+
+/// The sharded batch screener: owns `K` shards and screens batches of
+/// λ₂ targets across them, merging kept sets bit-identically to the
+/// unsharded [`crate::screening::rule::screen_multi_with`] sweep.
+pub struct ShardedScreener {
+    shards: Vec<Shard>,
+    /// Total feature count (the merged report length).
+    m: usize,
+    /// Worker threads for the shard fan-out.
+    workers: usize,
+}
+
+impl ShardedScreener {
+    /// Builds `k` shards (clamped to `[1, m]`) over the problem's
+    /// features, balanced by the problem cache's per-column nnz. Each
+    /// shard gathers its columns once, here, and keeps them for the
+    /// screener's lifetime.
+    pub fn build(problem: &Problem, k: usize, workers: usize) -> Result<Self> {
+        let m = problem.m();
+        let cache = problem.cache();
+        let plan = ShardPlan::build(&cache.col_nnz, k);
+        let mut shards = Vec::with_capacity(plan.len());
+        for (id, range) in plan.ranges.iter().enumerate() {
+            let red = ReducedProblem::build_with(
+                &problem.x,
+                range.clone().collect(),
+                Some(cache),
+                workers,
+            )?;
+            debug_assert!(red.cache.is_some(), "shard gather must remap the cache");
+            shards.push(Shard { id, range: range.clone(), red, tele: ShardTele::new(id) });
+        }
+        // Build-time shape gauges: shard count, per-shard nnz, and the
+        // max-over-mean imbalance ratio (1.0 = perfectly balanced).
+        let tele = telemetry::global();
+        tele.gauge("coordinator.shard.count").set(shards.len() as f64);
+        let nnzs: Vec<usize> = shards.iter().map(|s| s.nnz()).collect();
+        for s in &shards {
+            tele.gauge(&format!("coordinator.shard.{}.nnz", s.id)).set(s.nnz() as f64);
+        }
+        if !nnzs.is_empty() {
+            let max = *nnzs.iter().max().unwrap() as f64;
+            let mean = nnzs.iter().sum::<usize>() as f64 / nnzs.len() as f64;
+            tele.gauge("coordinator.shard.imbalance")
+                .set(if mean > 0.0 { max / mean } else { 1.0 });
+        }
+        Ok(ShardedScreener { shards, m, workers: workers.max(1) })
+    }
+
+    /// Number of live shards (≤ the requested `k`).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total feature count across shards.
+    pub fn n_features(&self) -> usize {
+        self.m
+    }
+
+    /// Screens every feature for each target λ₂ against the dual point
+    /// `(lambda1, theta1)`, fanning the sweep out across shards. Same
+    /// contract as [`crate::screening::rule::screen_multi_with`]: one
+    /// report per target, `seconds` amortized over the batch, and the
+    /// kept sets bit-identical to the unsharded sweep.
+    pub fn screen_multi(
+        &self,
+        rule: RuleKind,
+        y: &[f64],
+        theta1: &[f64],
+        lambda1: f64,
+        lambda2s: &[f64],
+    ) -> Result<Vec<ScreenReport>> {
+        let t0 = std::time::Instant::now();
+        let k = lambda2s.len();
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if rule == RuleKind::None {
+            // Keep-all short circuit, mirroring the unsharded path (which
+            // skips context construction — and its λ validation — too).
+            return Ok(lambda2s
+                .iter()
+                .map(|&l2| {
+                    let rep = ScreenReport::from_bounds(
+                        rule,
+                        lambda1,
+                        l2,
+                        vec![f64::INFINITY; self.m],
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    record_screen_telemetry(&rep, 1, "shard");
+                    rep
+                })
+                .collect());
+        }
+        let ctxs: Vec<SharedContext> = lambda2s
+            .iter()
+            .map(|&l2| SharedContext::build(y, theta1, lambda1, l2))
+            .collect::<Result<_>>()?;
+        let r = Rule(rule);
+        // Fan out: each worker sweeps whole shards; per-shard scores are
+        // per-target vectors in shard-local feature order.
+        let shard_scores: Vec<Vec<Vec<f64>>> =
+            parallel_map(&self.shards, self.workers, |shard| {
+                let span = Span::enter_labeled(
+                    "coordinator.shard",
+                    Some(format!("shard {} ({} features)", shard.id, shard.range.len())),
+                );
+                let st = std::time::Instant::now();
+                let cache = shard.red.cache.as_ref().expect("shard cache");
+                let m_local = shard.red.x.n_features();
+                let mut scores = vec![Vec::with_capacity(m_local); k];
+                for j in 0..m_local {
+                    // One θ-dot per feature: the λ-independent stats come
+                    // from the shard's remapped cache.
+                    let s = FeatureStats::from_cache(
+                        &shard.red.x,
+                        cache,
+                        j,
+                        &ctxs[0].ytheta1,
+                    );
+                    for (t, ctx) in ctxs.iter().enumerate() {
+                        scores[t].push(r.score(ctx, &s));
+                    }
+                }
+                shard.tele.seconds.record(st.elapsed().as_secs_f64());
+                let kept: usize = scores
+                    .iter()
+                    .flat_map(|v| v.iter())
+                    .filter(|&&b| b >= KEEP_THRESHOLD)
+                    .count();
+                shard.tele.kept.add(kept as u64);
+                shard.tele.screened.add((k * m_local - kept) as u64);
+                drop(span);
+                scores
+            });
+        // Merge: shards are contiguous ascending ranges, so concatenating
+        // shard bounds in shard order restores original feature order.
+        let seconds = t0.elapsed().as_secs_f64() / k as f64;
+        let reports: Vec<ScreenReport> = lambda2s
+            .iter()
+            .enumerate()
+            .map(|(t, &l2)| {
+                let mut bounds = Vec::with_capacity(self.m);
+                for ss in &shard_scores {
+                    bounds.extend_from_slice(&ss[t]);
+                }
+                ScreenReport::from_bounds(rule, lambda1, l2, bounds, seconds)
+            })
+            .collect();
+        for (i, rep) in reports.iter().enumerate() {
+            if rep.keep.len() != self.m {
+                return Err(Error::coordinator(format!(
+                    "shard merge produced {} features, expected {}",
+                    rep.keep.len(),
+                    self.m
+                )));
+            }
+            // The whole batch shares the shard fan-out; count one sweep.
+            record_screen_telemetry(rep, if i == 0 { 1 } else { 0 }, "shard");
+        }
+        Ok(reports)
+    }
+
+    /// Single-target convenience wrapper over [`Self::screen_multi`].
+    pub fn screen_all(
+        &self,
+        rule: RuleKind,
+        y: &[f64],
+        theta1: &[f64],
+        lambda1: f64,
+        lambda2: f64,
+    ) -> Result<ScreenReport> {
+        let mut reps = self.screen_multi(rule, y, theta1, lambda1, &[lambda2])?;
+        reps.pop().ok_or_else(|| Error::coordinator("empty shard sweep"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::screening::rule::screen_multi_with;
+
+    #[test]
+    fn plan_covers_and_clamps() {
+        let nnz = vec![5usize, 1, 1, 9, 2, 2, 2, 8];
+        let plan = ShardPlan::build(&nnz, 3);
+        assert!(plan.len() <= 3 && !plan.is_empty());
+        let mut next = 0;
+        for r in &plan.ranges {
+            assert_eq!(r.start, next);
+            assert!(!r.is_empty());
+            next = r.end;
+        }
+        assert_eq!(next, 8);
+        // More shards than features: one shard per feature at most.
+        assert!(ShardPlan::build(&nnz, 100).len() <= 8);
+        assert!(ShardPlan::build(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bitwise() {
+        let p = crate::svm::problem::Problem::from_dataset(
+            &SynthSpec::text(60, 180, 901).generate(),
+        );
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        let l2s = [0.9 * l1, 0.5 * l1];
+        let reference = screen_multi_with(
+            RuleKind::Paper,
+            &p.x,
+            &p.y,
+            &theta1,
+            l1,
+            &l2s,
+            Some(p.cache()),
+        )
+        .unwrap();
+        let sc = ShardedScreener::build(&p, 4, 2).unwrap();
+        assert!(sc.num_shards() >= 2);
+        let sharded =
+            sc.screen_multi(RuleKind::Paper, &p.y, &theta1, l1, &l2s).unwrap();
+        for (a, b) in sharded.iter().zip(&reference) {
+            assert_eq!(a.keep, b.keep);
+            assert_eq!(a.bounds, b.bounds, "bounds must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn none_rule_and_empty_batch() {
+        let p = crate::svm::problem::Problem::from_dataset(
+            &SynthSpec::dense(20, 10, 903).generate(),
+        );
+        let theta1 = p.theta_at_lambda_max().theta();
+        let sc = ShardedScreener::build(&p, 3, 1).unwrap();
+        assert!(sc
+            .screen_multi(RuleKind::Paper, &p.y, &theta1, p.lambda_max(), &[])
+            .unwrap()
+            .is_empty());
+        let rep = sc
+            .screen_all(
+                RuleKind::None,
+                &p.y,
+                &theta1,
+                p.lambda_max(),
+                0.5 * p.lambda_max(),
+            )
+            .unwrap();
+        assert_eq!(rep.n_screened(), 0);
+        assert_eq!(rep.keep.len(), 10);
+    }
+
+    #[test]
+    fn bad_lambdas_error_instead_of_panicking() {
+        let p = crate::svm::problem::Problem::from_dataset(
+            &SynthSpec::dense(15, 6, 905).generate(),
+        );
+        let theta1 = p.theta_at_lambda_max().theta();
+        let sc = ShardedScreener::build(&p, 2, 1).unwrap();
+        let l1 = p.lambda_max();
+        assert!(sc
+            .screen_multi(RuleKind::Paper, &p.y, &theta1, l1, &[2.0 * l1])
+            .is_err());
+        assert!(sc
+            .screen_multi(RuleKind::Paper, &p.y, &theta1, l1, &[0.0])
+            .is_err());
+    }
+}

@@ -29,7 +29,7 @@
 //! let problem = Problem::from_dataset(&ds);
 //!
 //! // Train a 20-point regularization path with safe screening.
-//! let grid = svmscreen::path::grid::geometric(problem.lambda_max(), 0.05, 20);
+//! let grid = svmscreen::path::grid::geometric(problem.lambda_max(), 0.05, 20).unwrap();
 //! let cfg = svmscreen::path::runner::PathConfig::default();
 //! let report = svmscreen::path::runner::run_path(&problem, &grid, &cfg).unwrap();
 //! println!("{}", report.summary_table());
@@ -77,6 +77,10 @@
 //! * **`PALLAS_STATS_DUMP_SECS`** = `N` — `serve` only: emit a full
 //!   stats snapshot through the sinks every N seconds
 //!   ([`telemetry::start_stats_dump_from_env`]).
+//! * **`PALLAS_SHARDS`** = `K` — `serve` only: default for `--shards`;
+//!   `K > 1` screens batches across K nnz-balanced feature shards with
+//!   per-shard cache reuse ([`coordinator::ShardedScreener`],
+//!   `coordinator.shard.*` metrics).
 //!
 //! Beyond aggregate metrics, a bounded trace ring
 //! ([`telemetry::trace`]) captures every completed span (name, label,

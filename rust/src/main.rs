@@ -42,6 +42,7 @@ fn run(args: &[String]) -> Result<()> {
         "data", "rule", "solver", "steps", "min-frac", "tol", "workers", "engine",
         "artifacts", "addr", "lambda-frac", "lambda2-frac", "out", "csv",
         "trace-out", "audit", "ledger", "near-miss-eps", "feature", "top", "export",
+        "shards",
     ] {
         if let Some(v) = cli.flags.get(key) {
             raw.set(key, v);
@@ -175,7 +176,7 @@ fn cmd_path(cfg: &RunConfig, csv: Option<&str>) -> Result<()> {
         ledger.set_near_miss_eps(cfg.near_miss_eps);
     }
     let p = load_problem(cfg)?;
-    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps);
+    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps)?;
     let report = run_path(&p, &grid, &cfg.path_config())?;
     println!("{}", report.summary_table());
     let t = report.totals();
@@ -250,7 +251,7 @@ fn cmd_explain(cfg: &RunConfig, raw: &RawConfig) -> Result<()> {
     svmscreen::diag::convergence::clear_log();
 
     let p = load_problem(cfg)?;
-    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps);
+    let grid = svmscreen::path::grid::geometric(p.lambda_max(), cfg.min_frac, cfg.steps)?;
     let report = run_path(&p, &grid, &cfg.path_config())?;
     println!("{}", report.summary_table());
     print_ledger_summary(&ledger.summary());
@@ -318,10 +319,17 @@ fn cmd_serve(cfg: &RunConfig) -> Result<()> {
             workers: cfg.workers,
             rule: cfg.rule,
             solve: cfg.solve_options(),
+            shards: cfg.shards,
             ..Default::default()
         },
     )?;
     println!("screening service listening on {}", server.addr);
+    if cfg.shards > 1 {
+        println!(
+            "sharded executor: {} shard(s) (see coordinator.shard.* in stats)",
+            cfg.shards
+        );
+    }
     println!("protocol: one JSON object per line; try {{\"cmd\":\"info\"}}");
     // Long runs: arm the periodic stats dump when configured.
     if let Some(every) = svmscreen::telemetry::start_stats_dump_from_env() {

@@ -1,22 +1,60 @@
 //! λ-grid construction.
+//!
+//! Both constructors return [`Result`] instead of asserting: a grid is
+//! built from *data-derived* quantities (`lambda_max` of whatever the
+//! user loaded), so degenerate inputs are runtime conditions to report,
+//! not programmer errors to panic on. `count == 0` is documented as the
+//! empty grid, not an error — "no path points" is a valid request.
+
+use crate::error::{Error, Result};
 
 /// Geometric grid of `count` values from `lambda_max` down to
 /// `min_frac * lambda_max` (exclusive of `lambda_max` itself, inclusive
 /// of the endpoint), descending — the standard path grid.
-pub fn geometric(lambda_max: f64, min_frac: f64, count: usize) -> Vec<f64> {
-    assert!(lambda_max > 0.0, "lambda_max must be positive");
-    assert!((0.0..1.0).contains(&min_frac) && min_frac > 0.0, "min_frac in (0,1)");
-    assert!(count >= 1);
+///
+/// Errors on non-finite or non-positive `lambda_max` (degenerate data:
+/// all-zero features, NaN labels) and on `min_frac` outside `(0, 1)`
+/// (the grid would ascend or repeat `lambda_max`). `count == 0` returns
+/// an empty grid.
+pub fn geometric(lambda_max: f64, min_frac: f64, count: usize) -> Result<Vec<f64>> {
+    if !(lambda_max.is_finite() && lambda_max > 0.0) {
+        return Err(Error::data(format!(
+            "grid needs positive finite lambda_max, got {lambda_max}"
+        )));
+    }
+    if !(min_frac.is_finite() && min_frac > 0.0 && min_frac < 1.0) {
+        return Err(Error::config(format!(
+            "grid min_frac must be in (0, 1), got {min_frac}"
+        )));
+    }
+    if count == 0 {
+        return Ok(Vec::new());
+    }
     let ratio = min_frac.powf(1.0 / count as f64);
-    (1..=count).map(|k| lambda_max * ratio.powi(k as i32)).collect()
+    Ok((1..=count).map(|k| lambda_max * ratio.powi(k as i32)).collect())
 }
 
-/// Linear grid (used by gap-sweep experiments).
-pub fn linear(lambda_hi: f64, lambda_lo: f64, count: usize) -> Vec<f64> {
-    assert!(lambda_hi > lambda_lo && lambda_lo > 0.0);
-    assert!(count >= 2);
-    let step = (lambda_hi - lambda_lo) / (count - 1) as f64;
-    (0..count).map(|k| lambda_hi - step * k as f64).collect()
+/// Linear grid (used by gap-sweep experiments), `lambda_hi` down to
+/// `lambda_lo` inclusive.
+///
+/// Errors unless `lambda_hi > lambda_lo > 0` and both are finite.
+/// `count == 0` returns an empty grid; `count == 1` returns just
+/// `lambda_hi`.
+pub fn linear(lambda_hi: f64, lambda_lo: f64, count: usize) -> Result<Vec<f64>> {
+    if !(lambda_hi.is_finite() && lambda_lo.is_finite() && lambda_hi > lambda_lo && lambda_lo > 0.0)
+    {
+        return Err(Error::config(format!(
+            "linear grid needs lambda_hi > lambda_lo > 0 (finite), got hi={lambda_hi} lo={lambda_lo}"
+        )));
+    }
+    match count {
+        0 => Ok(Vec::new()),
+        1 => Ok(vec![lambda_hi]),
+        _ => {
+            let step = (lambda_hi - lambda_lo) / (count - 1) as f64;
+            Ok((0..count).map(|k| lambda_hi - step * k as f64).collect())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -26,7 +64,7 @@ mod tests {
 
     #[test]
     fn geometric_endpoints_and_order() {
-        let g = geometric(10.0, 0.01, 20);
+        let g = geometric(10.0, 0.01, 20).unwrap();
         assert_eq!(g.len(), 20);
         assert!(g[0] < 10.0);
         assert_close(g[19], 0.1, 1e-9, "endpoint");
@@ -39,13 +77,26 @@ mod tests {
 
     #[test]
     fn linear_grid() {
-        let g = linear(5.0, 1.0, 5);
+        let g = linear(5.0, 1.0, 5).unwrap();
         assert_eq!(g, vec![5.0, 4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(linear(5.0, 1.0, 0).unwrap(), Vec::<f64>::new());
+        assert_eq!(linear(5.0, 1.0, 1).unwrap(), vec![5.0]);
+        assert!(linear(1.0, 5.0, 3).is_err());
+        assert!(linear(5.0, 0.0, 3).is_err());
     }
 
     #[test]
-    #[should_panic]
-    fn geometric_validates() {
-        geometric(10.0, 1.5, 5);
+    fn geometric_rejects_degenerate_inputs() {
+        // Every former assert!/silent-misbehavior case is now an Err or
+        // a documented empty grid.
+        assert!(geometric(10.0, 1.5, 5).is_err(), "min_frac >= 1");
+        assert!(geometric(10.0, 1.0, 5).is_err(), "min_frac == 1");
+        assert!(geometric(10.0, 0.0, 5).is_err(), "min_frac == 0");
+        assert!(geometric(0.0, 0.5, 5).is_err(), "lambda_max == 0");
+        assert!(geometric(-3.0, 0.5, 5).is_err(), "negative lambda_max");
+        assert!(geometric(f64::NAN, 0.5, 5).is_err(), "NaN lambda_max");
+        assert!(geometric(f64::INFINITY, 0.5, 5).is_err(), "inf lambda_max");
+        assert!(geometric(10.0, f64::NAN, 5).is_err(), "NaN min_frac");
+        assert_eq!(geometric(10.0, 0.5, 0).unwrap(), Vec::<f64>::new());
     }
 }

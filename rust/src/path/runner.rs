@@ -344,7 +344,7 @@ mod tests {
         // THE correctness property of the whole system: safe screening
         // must not change the solution path (same objectives per step).
         let p = problem(111);
-        let grid = geometric(p.lambda_max(), 0.1, 8);
+        let grid = geometric(p.lambda_max(), 0.1, 8).unwrap();
         let precise = SolveOptions { tol: 1e-8, max_iter: 20000, ..Default::default() };
         let none = run_path(
             &p,
@@ -386,7 +386,7 @@ mod tests {
     fn rejection_decreases_along_path() {
         // As lambda shrinks, more features become active -> rejection drops.
         let p = problem(113);
-        let grid = geometric(p.lambda_max(), 0.05, 10);
+        let grid = geometric(p.lambda_max(), 0.05, 10).unwrap();
         let rep = run_path(&p, &grid, &PathConfig::default()).unwrap();
         let first = rep.steps.first().unwrap().rejection;
         let last = rep.steps.last().unwrap().rejection;
@@ -397,7 +397,7 @@ mod tests {
     #[test]
     fn strong_rule_repair_loop_runs() {
         let p = problem(115);
-        let grid = geometric(p.lambda_max(), 0.1, 6);
+        let grid = geometric(p.lambda_max(), 0.1, 6).unwrap();
         let rep = run_path(
             &p,
             &grid,
@@ -426,7 +426,7 @@ mod tests {
     #[test]
     fn audit_mode_reports_clean_steps_for_safe_rule() {
         let p = problem(121);
-        let grid = geometric(p.lambda_max(), 0.1, 5);
+        let grid = geometric(p.lambda_max(), 0.1, 5).unwrap();
         let rep = run_path(
             &p,
             &grid,
@@ -448,7 +448,7 @@ mod tests {
     #[test]
     fn summary_table_renders() {
         let p = problem(117);
-        let grid = geometric(p.lambda_max(), 0.3, 3);
+        let grid = geometric(p.lambda_max(), 0.3, 3).unwrap();
         let rep = run_path(&p, &grid, &PathConfig::default()).unwrap();
         let table = rep.summary_table().to_string();
         assert!(table.contains("paper"));

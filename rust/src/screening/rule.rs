@@ -88,6 +88,22 @@ pub struct ScreenReport {
 }
 
 impl ScreenReport {
+    /// Seals a report from per-feature bounds: the keep mask is derived
+    /// with the same [`KEEP_THRESHOLD`] comparison every sweep path
+    /// (sequential, batched, block-parallel, sharded) shares, so two
+    /// paths that produce bit-identical bounds produce identical
+    /// kept sets by construction.
+    pub fn from_bounds(
+        rule: RuleKind,
+        lambda1: f64,
+        lambda2: f64,
+        bounds: Vec<f64>,
+        seconds: f64,
+    ) -> Self {
+        let keep = bounds.iter().map(|&b| b >= KEEP_THRESHOLD).collect();
+        ScreenReport { rule, lambda1, lambda2, keep, bounds, seconds }
+    }
+
     /// Number of screened-out (discarded) features.
     pub fn n_screened(&self) -> usize {
         self.keep.iter().filter(|k| !**k).count()
@@ -170,29 +186,25 @@ pub fn screen_all_with<X: FeatureMatrix>(
 ) -> Result<ScreenReport> {
     let t0 = std::time::Instant::now();
     let m = x.n_features();
-    let mut keep = vec![true; m];
     let mut bounds = vec![f64::INFINITY; m];
     if rule != RuleKind::None {
         let ctx = SharedContext::build(y, theta1, lambda1, lambda2)?;
         let r = Rule(rule);
-        for j in 0..m {
+        for (j, bound) in bounds.iter_mut().enumerate() {
             let s = match cache {
                 Some(c) => FeatureStats::from_cache(x, c, j, &ctx.ytheta1),
                 None => FeatureStats::compute(x, j, y, &ctx.ytheta1),
             };
-            let score = r.score(&ctx, &s);
-            bounds[j] = score;
-            keep[j] = score >= KEEP_THRESHOLD;
+            *bound = r.score(&ctx, &s);
         }
     }
-    let report = ScreenReport {
+    let report = ScreenReport::from_bounds(
         rule,
         lambda1,
         lambda2,
-        keep,
         bounds,
-        seconds: t0.elapsed().as_secs_f64(),
-    };
+        t0.elapsed().as_secs_f64(),
+    );
     record_screen_telemetry(&report, 1, "seq");
     Ok(report)
 }
@@ -203,7 +215,7 @@ pub fn screen_all_with<X: FeatureMatrix>(
 /// amortizes (1 for [`screen_all`]; `1/k`-shared for [`screen_multi`],
 /// which calls this once per target with `sweeps = 0` after the first).
 /// `source` tags which sweep path produced the report (`"seq"` /
-/// `"batch"` / `"par"`) and flows into the provenance ledger
+/// `"batch"` / `"par"` / `"shard"`) and flows into the provenance ledger
 /// ([`crate::diag::ledger`]), which — when enabled — records one
 /// per-feature verdict per report. The ledger only *reads* the sealed
 /// report, so screening results are identical either way.
@@ -291,7 +303,6 @@ pub fn screen_multi_with<X: FeatureMatrix>(
         .map(|&l2| SharedContext::build(y, theta1, lambda1, l2))
         .collect::<Result<_>>()?;
     let r = Rule(rule);
-    let mut keeps = vec![vec![true; m]; k];
     let mut bounds = vec![vec![f64::INFINITY; m]; k];
     for j in 0..m {
         // One data pass, shared by all targets (ytheta1 identical per ctx).
@@ -300,22 +311,15 @@ pub fn screen_multi_with<X: FeatureMatrix>(
             None => FeatureStats::compute(x, j, y, &ctxs[0].ytheta1),
         };
         for (t, ctx) in ctxs.iter().enumerate() {
-            let score = r.score(ctx, &s);
-            bounds[t][j] = score;
-            keeps[t][j] = score >= KEEP_THRESHOLD;
+            bounds[t][j] = r.score(ctx, &s);
         }
     }
     let seconds = t0.elapsed().as_secs_f64() / k as f64;
     let reports: Vec<ScreenReport> = lambda2s
         .iter()
-        .zip(keeps.into_iter().zip(bounds))
-        .map(|(&l2, (keep, bounds))| ScreenReport {
-            rule,
-            lambda1,
-            lambda2: l2,
-            keep,
-            bounds,
-            seconds,
+        .zip(bounds)
+        .map(|(&l2, bounds)| {
+            ScreenReport::from_bounds(rule, lambda1, l2, bounds, seconds)
         })
         .collect();
     for (i, rep) in reports.iter().enumerate() {

@@ -134,7 +134,7 @@ fn incremental_reduction_matches_scratch() {
 #[test]
 fn incremental_path_identical_to_scratch_path() {
     let p = Problem::from_dataset(&SynthSpec::text(80, 300, 905).generate());
-    let grid = geometric(p.lambda_max(), 0.05, 10);
+    let grid = geometric(p.lambda_max(), 0.05, 10).unwrap();
     let inc = run_path(
         &p,
         &grid,
@@ -183,7 +183,7 @@ fn parallel_screen_records_sweep_telemetry() {
 #[test]
 fn path_run_registers_cache_metrics() {
     let p = Problem::from_dataset(&SynthSpec::text(60, 250, 909).generate());
-    let grid = geometric(p.lambda_max(), 0.1, 6);
+    let grid = geometric(p.lambda_max(), 0.1, 6).unwrap();
     run_path(&p, &grid, &PathConfig::default()).unwrap();
     let snap = svmscreen::telemetry::global().snapshot();
     for key in ["path.cache.hits", "path.cache.misses", "path.gather_bytes"] {

@@ -126,7 +126,7 @@ fn explain_query_answers_from_a_path_run() {
     ledger.set_enabled(true);
 
     let p = Problem::from_dataset(&SynthSpec::dense(40, 30, 1304).generate());
-    let grid = geometric(p.lambda_max(), 0.2, 5);
+    let grid = geometric(p.lambda_max(), 0.2, 5).unwrap();
     let report = run_path(&p, &grid, &PathConfig::default()).unwrap();
     assert_eq!(report.steps.len(), 5);
 

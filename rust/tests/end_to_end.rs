@@ -19,7 +19,7 @@ fn all_safe_rules_preserve_the_path() {
     ];
     for spec in specs {
         let p = Problem::from_dataset(&spec.generate());
-        let grid = geometric(p.lambda_max(), 0.1, 6);
+        let grid = geometric(p.lambda_max(), 0.1, 6).unwrap();
         let opts = SolveOptions { tol: 1e-8, max_iter: 30000, ..Default::default() };
         let baseline = run_path(
             &p,
@@ -65,7 +65,7 @@ fn all_safe_rules_preserve_the_path() {
 #[test]
 fn rule_power_ordering_holds_on_paths() {
     let p = Problem::from_dataset(&SynthSpec::text(80, 300, 405).generate());
-    let grid = geometric(p.lambda_max(), 0.1, 8);
+    let grid = geometric(p.lambda_max(), 0.1, 8).unwrap();
     let mut rejections = Vec::new();
     for rule in [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere] {
         let run =
@@ -90,7 +90,7 @@ fn rule_power_ordering_holds_on_paths() {
 #[test]
 fn solvers_agree_on_screened_path() {
     let p = Problem::from_dataset(&SynthSpec::dense(60, 40, 407).generate());
-    let grid = geometric(p.lambda_max(), 0.2, 5);
+    let grid = geometric(p.lambda_max(), 0.2, 5).unwrap();
     let opts = SolveOptions { tol: 1e-7, max_iter: 50000, ..Default::default() };
     let cd = run_path(
         &p,
@@ -119,7 +119,7 @@ fn solvers_agree_on_screened_path() {
 #[test]
 fn path_active_sets_grow_sensibly() {
     let p = Problem::from_dataset(&SynthSpec::text(100, 400, 409).generate());
-    let grid = geometric(p.lambda_max(), 0.05, 10);
+    let grid = geometric(p.lambda_max(), 0.05, 10).unwrap();
     let run = run_path(&p, &grid, &PathConfig::default()).unwrap();
     let first_nnz = run.steps.first().unwrap().nnz;
     let last_nnz = run.steps.last().unwrap().nnz;

@@ -1,0 +1,174 @@
+//! Sharded-screening correctness guarantees: the sharded coordinator's
+//! merged kept sets (and raw bounds) are bit-identical to the unsharded
+//! sweep across every rule, storage backend and shard count, and the
+//! sharded server exposes per-shard metrics through `{"cmd":"stats"}`.
+
+use svmscreen::coordinator::protocol::Json;
+use svmscreen::coordinator::server::{Client, ScreeningServer, ServerConfig};
+use svmscreen::coordinator::ShardedScreener;
+use svmscreen::data::synth::SynthSpec;
+use svmscreen::screening::rule::{screen_multi_with, RuleKind};
+use svmscreen::svm::problem::Problem;
+
+const RULES: [RuleKind; 4] =
+    [RuleKind::Paper, RuleKind::BallEq, RuleKind::Sphere, RuleKind::Strong];
+
+/// Every rule × {dense, sparse} × K ∈ {1, 3, m}: merged shard output is
+/// the unsharded output to the last bit — same keep decisions AND same
+/// bound values, at both a near-λ_max and a deep-path target.
+#[test]
+fn sharded_bit_identical_to_unsharded() {
+    let specs = [SynthSpec::dense(40, 60, 911), SynthSpec::text(60, 240, 912)];
+    for spec in specs {
+        let p = Problem::from_dataset(&spec.generate());
+        let m = p.m();
+        let theta1 = p.theta_at_lambda_max().theta();
+        let l1 = p.lambda_max();
+        let l2s = [0.9 * l1, 0.3 * l1];
+        for rule in RULES {
+            let reference = screen_multi_with(
+                rule,
+                &p.x,
+                &p.y,
+                &theta1,
+                l1,
+                &l2s,
+                Some(p.cache()),
+            )
+            .unwrap();
+            for k in [1, 3, m] {
+                let sc = ShardedScreener::build(&p, k, 2).unwrap();
+                let sharded =
+                    sc.screen_multi(rule, &p.y, &theta1, l1, &l2s).unwrap();
+                assert_eq!(sharded.len(), reference.len());
+                for (s, r) in sharded.iter().zip(&reference) {
+                    assert_eq!(
+                        s.keep, r.keep,
+                        "keep mismatch: rule {rule:?} shards {k} m {m}"
+                    );
+                    assert_eq!(
+                        s.bounds, r.bounds,
+                        "bounds not bit-identical: rule {rule:?} shards {k}"
+                    );
+                    assert_eq!(s.lambda1, r.lambda1);
+                    assert_eq!(s.lambda2, r.lambda2);
+                }
+            }
+        }
+    }
+}
+
+/// Requesting more shards than features clamps instead of panicking or
+/// emitting empty shards, and stays bit-identical.
+#[test]
+fn shard_count_exceeding_features_clamps() {
+    let p = Problem::from_dataset(&SynthSpec::dense(30, 7, 913).generate());
+    let theta1 = p.theta_at_lambda_max().theta();
+    let l1 = p.lambda_max();
+    let sc = ShardedScreener::build(&p, 50, 2).unwrap();
+    assert!(sc.num_shards() <= 7, "got {} shards for 7 features", sc.num_shards());
+    assert!(sc.num_shards() >= 1);
+    let reference = screen_multi_with(
+        RuleKind::Paper,
+        &p.x,
+        &p.y,
+        &theta1,
+        l1,
+        &[0.5 * l1],
+        Some(p.cache()),
+    )
+    .unwrap();
+    let sharded =
+        sc.screen_multi(RuleKind::Paper, &p.y, &theta1, l1, &[0.5 * l1]).unwrap();
+    assert_eq!(sharded[0].keep, reference[0].keep);
+    assert_eq!(sharded[0].bounds, reference[0].bounds);
+}
+
+fn req(c: &mut Client, fields: Vec<(&str, Json)>) -> Json {
+    c.request(&Json::obj(fields)).unwrap()
+}
+
+/// End-to-end over the wire: a sharded server screens identically to an
+/// unsharded one, and `{"cmd":"stats"}` exposes the per-shard
+/// kept/screened counters, the seconds histogram, and the shard-shape
+/// gauges the tentpole promises.
+#[test]
+fn sharded_server_matches_unsharded_and_exports_shard_metrics() {
+    let spec = SynthSpec::text(50, 150, 914);
+    let p_sharded = Problem::from_dataset(&spec.generate());
+    let p_plain = Problem::from_dataset(&spec.generate());
+
+    let sharded = ScreeningServer::start(
+        p_sharded,
+        ServerConfig { shards: 3, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let plain = ScreeningServer::start(p_plain, ServerConfig::default()).unwrap();
+
+    let mut cs = Client::connect(sharded.addr).unwrap();
+    let mut cp = Client::connect(plain.addr).unwrap();
+    let info = req(&mut cs, vec![("cmd", Json::Str("info".into()))]);
+    let lmax = info.get("lambda_max").unwrap().as_f64().unwrap();
+
+    for frac in [0.8, 0.5, 0.25] {
+        let fields = || {
+            vec![
+                ("cmd", Json::Str("screen".into())),
+                ("lambda2", Json::Num(frac * lmax)),
+                ("indices", Json::Bool(true)),
+            ]
+        };
+        let rs = req(&mut cs, fields());
+        let rp = req(&mut cp, fields());
+        assert_eq!(rs.get("ok"), Some(&Json::Bool(true)), "{rs:?}");
+        assert_eq!(rs.get("kept"), rp.get("kept"), "frac {frac}");
+        assert_eq!(rs.get("screened"), rp.get("screened"), "frac {frac}");
+        assert_eq!(rs.get("indices"), rp.get("indices"), "frac {frac}");
+    }
+
+    let stats = req(&mut cs, vec![("cmd", Json::Str("stats".into()))]);
+    let metrics = stats.get("metrics").unwrap();
+    let counters = metrics.get("counters").unwrap();
+    let gauges = metrics.get("gauges").unwrap();
+    let hists = metrics.get("histograms").unwrap();
+    // Shard shape gauges (registered at build).
+    assert!(
+        gauges.get("coordinator.shard.count").unwrap().as_f64().unwrap() >= 2.0,
+        "{gauges:?}"
+    );
+    assert!(
+        gauges.get("coordinator.shard.imbalance").unwrap().as_f64().unwrap() >= 1.0
+    );
+    // Per-shard sweep metrics: every live shard screened 150 features
+    // over 3 requests, so kept + screened must be positive.
+    let shard_count =
+        gauges.get("coordinator.shard.count").unwrap().as_f64().unwrap() as usize;
+    for k in 0..shard_count {
+        let kept = counters
+            .get(&format!("coordinator.shard.{k}.kept"))
+            .unwrap_or_else(|| panic!("missing shard {k} kept counter"))
+            .as_f64()
+            .unwrap();
+        let screened = counters
+            .get(&format!("coordinator.shard.{k}.screened"))
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(kept + screened > 0.0, "shard {k} never swept");
+        let secs = hists.get(&format!("coordinator.shard.{k}.seconds")).unwrap();
+        assert!(
+            secs.get("count").unwrap().as_f64().unwrap() >= 3.0,
+            "shard {k} seconds histogram undercounts: {secs:?}"
+        );
+        assert!(gauges.get(&format!("coordinator.shard.{k}.nnz")).is_some());
+    }
+    // The sharded sweep reports into the per-rule screening telemetry
+    // exactly like seq/batch/par sweeps do (default server rule: paper).
+    assert!(
+        counters.get("screening.paper.sweeps").unwrap().as_f64().unwrap() >= 1.0,
+        "{counters:?}"
+    );
+
+    sharded.shutdown();
+    plain.shutdown();
+}

@@ -26,7 +26,7 @@ use svmscreen::telemetry::trace::{self, RecordKind, TraceRecord, TraceRing};
 
 fn small_path() {
     let p = Problem::from_dataset(&SynthSpec::text(60, 240, 71).generate());
-    let grid = geometric(p.lambda_max(), 0.3, 4);
+    let grid = geometric(p.lambda_max(), 0.3, 4).unwrap();
     run_path(&p, &grid, &PathConfig::default()).expect("path");
 }
 
@@ -174,7 +174,7 @@ fn trace_command_roundtrip_over_the_wire() {
 #[test]
 fn audit_mode_is_clean_on_synthetic_path() {
     let p = Problem::from_dataset(&SynthSpec::dense(60, 120, 73).generate());
-    let grid = geometric(p.lambda_max(), 0.2, 5);
+    let grid = geometric(p.lambda_max(), 0.2, 5).unwrap();
     let cfg = PathConfig { audit: true, ..Default::default() };
     let rep = run_path(&p, &grid, &cfg).expect("path");
     for s in &rep.steps {
